@@ -1,0 +1,1 @@
+"""Benchmarks: one per paper figure/table + roofline + beyond-paper rollups."""

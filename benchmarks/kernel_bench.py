@@ -1,0 +1,56 @@
+"""Kernel micro-bench: per-shape op counts and wall time for the IMC matmul
+kernels (interpret mode on CPU: wall time is indicative only; the derived
+column reports the structural quantities that transfer to TPU - MXU matmul
+count, VMEM working set, arithmetic intensity)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import imc_mvm, ref
+from repro.kernels.ref import BitSerialSpec, quantize_codes
+
+Row = Tuple[str, float, str]
+
+
+def _bench(fn, *args, iters=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    key = jax.random.PRNGKey(0)
+    for (b, k, m, bx, bw) in [(64, 512, 128, 6, 6), (128, 1024, 256, 7, 7),
+                              (32, 2048, 128, 4, 4)]:
+        k1, k2 = jax.random.split(jax.random.fold_in(key, k + m))
+        x = jax.random.normal(k1, (b, k))
+        w = jax.random.normal(k2, (k, m))
+        xc, _ = quantize_codes(x, bx, True, jnp.max(jnp.abs(x)))
+        wc, _ = quantize_codes(w, bw, True, jnp.max(jnp.abs(w)))
+        rows_bank = min(512, k)
+        spec = BitSerialSpec(bx=bx, bw=bw, b_adc=8, rows=rows_bank, k_h=60.0,
+                             v_c=55.0, x_signed=True)
+        us = _bench(
+            lambda: imc_mvm.imc_bitserial_matmul(xc, wc, None, None, spec,
+                                                 interpret=True)
+        )
+        n_banks = -(-k // rows_bank)
+        mxu_calls = bx * bw * n_banks * (-(-b // 128)) * (-(-m // 128))
+        vmem_kb = (128 * rows_bank + rows_bank * 128 + 128 * 128) * 4 / 1024
+        rows.append((
+            f"kernel/bitserial_B{b}_K{k}_M{m}_b{bx}x{bw}",
+            round(us, 1),
+            f"MXU_tiles={mxu_calls} vmem_tile={vmem_kb:.0f}KiB "
+            f"plane_flops={2*b*k*m*bx*bw/1e6:.0f}MF",
+        ))
+        us_ref = _bench(lambda: ref.imc_bitserial_ref(xc, wc, None, None, spec))
+        rows.append((f"kernel/ref_B{b}_K{k}_M{m}_b{bx}x{bw}",
+                     round(us_ref, 1), "pure-jnp oracle"))
+    return rows

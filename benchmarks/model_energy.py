@@ -1,0 +1,78 @@
+"""Beyond-paper: whole-model IMC energy/delay rollups (SSV-C extended from
+single DPs to the assigned architectures).
+
+Maps every matmul of each assigned architecture onto 512-row IMC banks at the
+min-energy design point meeting a target SNR_T, and reports energy/token and
+TOPS/W - the numbers an IMC accelerator architect would quote.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro import configs
+from repro.core.mapping import MatmulShape, map_model
+
+Row = Tuple[str, float, str]
+
+
+def model_matmul_shapes(name: str):
+    """All per-token matmul shapes of an arch (weights only; attention
+    score/value products are activation-activation and stay digital)."""
+    cfg = configs.get(name)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    shapes = []
+    counts = {}
+    for kind in cfg.pattern:
+        counts[kind] = counts.get(kind, 0) + cfg.n_full_cycles
+    for i, kind in enumerate(cfg.tail_kinds):
+        counts[kind] = counts.get(kind, 0) + 1
+    for kind, cnt in counts.items():
+        if kind in ("attn", "local"):
+            shapes += [
+                MatmulShape(f"{kind}.wq", d, cfg.n_heads * hd, cnt),
+                MatmulShape(f"{kind}.wk", d, cfg.n_kv_heads * hd, cnt),
+                MatmulShape(f"{kind}.wv", d, cfg.n_kv_heads * hd, cnt),
+                MatmulShape(f"{kind}.wo", cfg.n_heads * hd, d, cnt),
+            ]
+        elif kind == "ssm":
+            d_in = cfg.ssm_expand * d
+            proj = 2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state + d_in // cfg.ssm_head_dim
+            shapes += [
+                MatmulShape("ssm.in_proj", d, proj, cnt),
+                MatmulShape("ssm.out_proj", d_in, d, cnt),
+            ]
+        elif kind == "rglru":
+            w = cfg.rnn_width
+            shapes += [
+                MatmulShape("rg.x", d, w, cnt),
+                MatmulShape("rg.gate", d, w, cnt),
+                MatmulShape("rg.out", w, d, cnt),
+            ]
+        if kind != "ssm" and cfg.d_ff > 0:
+            mults = 3 if cfg.mlp_kind in ("swiglu", "geglu") else 2
+            e = cfg.top_k if cfg.n_experts else 1  # active experts per token
+            shapes += [
+                MatmulShape("mlp.wi", d, cfg.d_ff, cnt * e * (mults - 1)),
+                MatmulShape("mlp.wo", cfg.d_ff, d, cnt * e),
+            ]
+    shapes.append(MatmulShape("lm_head", d, cfg.vocab_size, 1))
+    return shapes
+
+
+def run(archs=("phi3-mini-3.8b", "gemma2-9b", "mamba2-2.7b",
+               "granite-moe-1b-a400m"), snr_t_db: float = 24.0) -> List[Row]:
+    rows: List[Row] = []
+    for name in archs:
+        shapes = model_matmul_shapes(name)
+        rep = map_model(shapes, snr_t_target_db=snr_t_db)
+        s = rep.summary()
+        rows.append((f"imc_energy/{name}/uJ_per_token",
+                     round(s["total_energy_j"] * 1e6, 3),
+                     f"@SNR_T>={snr_t_db}dB, 512-row banks"))
+        rows.append((f"imc_energy/{name}/TOPS_per_W",
+                     round(s["tops_per_watt"], 2),
+                     f"min layer SNR_T={s['min_snr_t_db']:.1f}dB"))
+        rows.append((f"imc_energy/{name}/fJ_per_MAC",
+                     round(s["energy_per_mac_fj"], 2),
+                     f"{int(s['layers'])} matmul groups"))
+    return rows

@@ -1,0 +1,103 @@
+"""Roofline report (deliverable (g)): reads dry-run artifacts and emits the
+per-(arch x shape x mesh) three-term roofline table + dominant bottleneck.
+
+  t_compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16 per chip)
+  t_memory     = HLO dot-stream bytes / HBM_bw   (819 GB/s per chip)
+  t_collective = wire bytes / ICI_bw             (50 GB/s per link)
+
+All quantities are per-device from the post-SPMD module, with the while-loop
+trip-count correction and the bf16 host-promotion correction (see
+launch/hlo_analysis.py).  roofline_fraction = t_compute / max(all terms): the
+fraction of peak the step would achieve if perfectly overlapped - the SSPerf
+score.  MODEL_FLOPS ratio flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def roofline_fraction(rec) -> float:
+    rf = rec["roofline"]
+    bound = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+    return rf["t_compute_s"] / bound if bound > 0 else 0.0
+
+
+def dominant(rec) -> str:
+    rf = rec["roofline"]
+    terms = {
+        "compute": rf["t_compute_s"],
+        "memory": rf["t_memory_s"],
+        "collective": rf["t_collective_s"],
+    }
+    return max(terms, key=terms.get)
+
+
+def markdown_table(recs, mesh_filter=None) -> str:
+    lines = [
+        "| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | "
+        "bottleneck | roofline frac | useful FLOPs | temp GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - | "
+                f"skipped | - | - | - |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - | "
+                f"ERROR | - | - | - |"
+            )
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['t_compute_s']:.4g} | {rf['t_memory_s']:.4g} "
+            f"| {rf['t_collective_s']:.4g} | {dominant(r)} "
+            f"| {roofline_fraction(r):.3f} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['memory']['temp_bytes']/2**30:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> List[Row]:
+    recs = load_records()
+    rows: List[Row] = []
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    rows.append(("roofline/cells_ok", len(ok), "compiled cells"))
+    rows.append(("roofline/cells_skipped", len(skipped),
+                 "long_500k on full-attention archs"))
+    rows.append(("roofline/cells_error",
+                 len(recs) - len(ok) - len(skipped), "must be 0"))
+    for r in ok:
+        if r["mesh"] != "16x16":
+            continue
+        key = f"roofline/{r['arch']}/{r['shape']}"
+        rows.append((key + "/frac", round(roofline_fraction(r), 4),
+                     dominant(r)))
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(markdown_table(recs))

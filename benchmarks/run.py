@@ -1,0 +1,47 @@
+"""Benchmark orchestrator (deliverable (d)): one entry per paper table/figure
+plus the roofline + beyond-paper extensions.  Prints ``name,value,derived``
+CSV rows (value is dB / fJ / seconds / count as per the name)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig4,fig9,fig10,fig11,fig12,fig13,"
+                         "pareto,layer_snr,model_energy,kernel,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, layer_snr, model_energy, roofline
+    from benchmarks.paper_figures import ALL as FIG_BENCHES
+
+    suites = {}
+    suites.update(FIG_BENCHES)
+    suites["layer_snr"] = layer_snr.run
+    suites["model_energy"] = model_energy.run
+    suites["kernel"] = kernel_bench.run
+    suites["roofline"] = roofline.run
+
+    only = set(args.only.split(",")) if args.only else None
+    print("name,value,derived")
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            continue
+        dt = time.perf_counter() - t0
+        for rname, val, derived in rows:
+            print(f'{rname},{val},"{derived}"')
+        print(f'{name}/_suite_s,{dt:.2f},"suite wall time"')
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Design-space exploration (paper SSV-D + SSVI): energy-vs-SNR pareto
+frontiers per technology node, and whole-model IMC deployment costs for the
+assigned architectures.
+
+Run:  PYTHONPATH=src python examples/design_sweep.py
+"""
+from repro.core import pareto_sweep, scaling
+from benchmarks.model_energy import model_matmul_shapes
+from repro.core.mapping import map_model
+
+print("== energy-vs-SNR_T pareto (N=256 DP) per node ==")
+for node_name in ("65nm", "22nm", "7nm"):
+    tech = scaling.node(node_name)
+    pts = pareto_sweep(n=256, tech=tech, targets_db=range(10, 32, 4))
+    line = ", ".join(
+        f"{t}dB:{pt.energy_per_dp*1e12:.1f}pJ({pt.arch_kind})" for t, pt in pts
+    )
+    print(f"{node_name}: {line}")
+
+print("\n== whole-model IMC deployment (24 dB SNR_T target) ==")
+for arch in ("phi3-mini-3.8b", "gemma2-9b", "granite-moe-1b-a400m",
+             "mamba2-2.7b"):
+    rep = map_model(model_matmul_shapes(arch), snr_t_target_db=24.0)
+    s = rep.summary()
+    print(f"{arch:24s} {s['total_energy_j']*1e6:8.2f} uJ/token  "
+          f"{s['tops_per_watt']:6.1f} TOPS/W  "
+          f"{s['energy_per_mac_fj']:6.1f} fJ/MAC")

@@ -1,0 +1,6 @@
+"""repro: IMC-limits-aware training/inference framework in JAX.
+
+Reproduces and extends "Fundamental Limits on Energy-Delay-Accuracy of
+In-memory Architectures in Inference Applications" (Gonugondla et al., 2020).
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""Sharded, atomic, async checkpointing."""
+from repro.checkpoint.manager import AsyncSaver, cleanup, latest_step, restore, save  # noqa: F401

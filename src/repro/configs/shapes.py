@@ -1,0 +1,85 @@
+"""Input-shape registry (the assignment's per-arch shape set) and
+``input_specs()``: ShapeDtypeStruct stand-ins for every model input - weak-type
+correct, shardable, no device allocation (dry-run pattern).
+
+  train_4k      seq_len=4096    global_batch=256   lowers train_step
+  prefill_32k   seq_len=32768   global_batch=32    lowers serve prefill
+  decode_32k    seq_len=32768   global_batch=128   lowers serve decode_step
+  long_500k     seq_len=524288  global_batch=1     lowers decode_step;
+                sub-quadratic archs only (mamba2, recurrentgemma) - skips are
+                recorded, not silently dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if runnable; otherwise a skip reason (recorded in EXPERIMENTS.md)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.name} has unbounded-range attention layers"
+        )
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the step inputs (excluding params/cache/state)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.modality == "vlm":
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.prefix_len, cfg.d_model), jnp.bfloat16
+            )
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.modality == "vlm":
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.prefix_len, cfg.d_model), jnp.bfloat16
+            )
+        return specs
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs for the decode cache (eval_shape over init_cache)."""
+    from repro.models import init_cache
+
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def param_specs(cfg: ArchConfig):
+    from repro.models import init_params
+
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg)
+    )

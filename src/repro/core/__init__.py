@@ -1,0 +1,61 @@
+"""repro.core - the paper's primary contribution as a composable library.
+
+Fundamental limits on energy-delay-accuracy of in-memory computing (IMC)
+architectures (Gonugondla et al., 2020):
+
+  quant           additive quantization noise model, uniform quantizers, PARs
+  snr             compute SNR metrics + composition rules (eqs. 6-11)
+  precision       BGC / tBGC / MPC output-precision criteria (eqs. 12-15)
+  compute_models  QS / IS / QR physical compute models (eqs. 16-25, Table II)
+  archs           QS-Arch / QR-Arch / CM architecture analytics (Table III)
+  adc             column-ADC energy model (eq. 26)
+  scaling         technology-node parameter tables (SSV-D)
+  mc              sample-accurate Monte Carlo validators (SSV-A, Fig. 8)
+  design          min-energy design-point solver (SSVI guidelines as a solver)
+  mapping         matmul -> bank tiling + whole-model energy rollups
+  imc_linear      the executable IMC linear layer (digital/fakequant/analytic/bitserial)
+"""
+from repro.core.quant import (  # noqa: F401
+    QuantSpec,
+    SignalStats,
+    UNIFORM_STATS,
+    db,
+    undb,
+    fakequant,
+    quantize,
+    dequantize,
+    bit_planes,
+    combine_bit_planes,
+    sqnr_qiy,
+    sqnr_qiy_db_approx,
+)
+from repro.core.snr import compose_snr, compose_snr_db, empirical_snr_db  # noqa: F401
+from repro.core.precision import (  # noqa: F401
+    PrecisionAssignment,
+    assign_precisions,
+    by_bgc,
+    by_mpc_lower_bound,
+    gaussian_clip_stats,
+    optimal_zeta,
+    sqnr_qy_bgc_db,
+    sqnr_qy_fullrange,
+    sqnr_qy_mpc,
+    sqnr_qy_mpc_db,
+)
+from repro.core.compute_models import (  # noqa: F401
+    ISModel,
+    QRModel,
+    QSModel,
+    TechParams,
+    TECH_65NM,
+)
+from repro.core.archs import CMArch, IMCArch, QRArch, QSArch  # noqa: F401
+from repro.core.adc import adc_energy  # noqa: F401
+from repro.core.design import DesignPoint, optimize, pareto_sweep  # noqa: F401
+from repro.core.mapping import (  # noqa: F401
+    BankSpec,
+    MatmulShape,
+    ModelReport,
+    map_matmul,
+    map_model,
+)

@@ -1,0 +1,196 @@
+"""Design-space exploration: turn the paper's SSVI design guidelines into a solver.
+
+Given a DP dimension N, a target SNR_T, a technology node, and signal statistics,
+find the minimum-energy IMC design point:
+
+  * compute model / architecture: QS-Arch (knob: V_WL), QR-Arch (knob: C_o),
+    CM (knobs: V_WL, B_w),
+  * banking: if no feasible single-bank point exists at N (SNR_a caps out -
+    paper SSVI bullet 4: "multi-bank IMCs will be required for high-dimensional
+    DPs"), split the DP across n_banks banks of N/n_banks rows each and reduce
+    digitally; the analog SNR improves (smaller N per bank) at digital cost.
+  * B_ADC: assigned by MPC (eq. 15) - never BGC.
+
+The solver reproduces the paper's qualitative guideline "QS-based architectures
+are preferred at low compute SNR, QR-based at high compute SNR" (tests assert it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Optional
+
+import numpy as np
+
+from repro.core import precision as prec
+from repro.core.archs import CMArch, IMCArch, QRArch, QSArch
+from repro.core.compute_models import TechParams, TECH_65NM
+from repro.core.quant import SignalStats, UNIFORM_STATS
+from repro.core import snr as snr_lib
+
+V_WL_GRID = tuple(np.round(np.arange(0.50, 0.86, 0.025), 3))
+C_O_GRID = tuple(float(c) * 1e-15 for c in (0.5, 1, 1.5, 2, 3, 4.5, 6, 9, 12, 16))
+BANK_SPLITS = (1, 2, 4, 8, 16, 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    """A fully-specified IMC design for one dot-product shape."""
+
+    arch_kind: str  # "qs" | "qr" | "cm"
+    n: int  # total DP dimension
+    n_bank: int  # rows per bank
+    n_banks: int  # digital reduction fan-in
+    bx: int
+    bw: int
+    b_adc: int
+    knob: float  # V_WL (qs/cm) or C_o (qr)
+    tech: str
+    # predicted metrics
+    snr_a_db: float
+    snr_A_db: float
+    snr_t_db: float
+    energy_per_dp: float  # J (analog + ADC + digital reduction)
+    delay_per_dp: float  # s
+    edp: float
+
+    def arch(self, stats: SignalStats = UNIFORM_STATS) -> IMCArch:
+        from repro.core import scaling
+
+        tech = scaling.node(self.tech)
+        if self.arch_kind == "qs":
+            return QSArch(n=self.n_bank, bx=self.bx, bw=self.bw, stats=stats,
+                          tech=tech, v_wl=self.knob)
+        if self.arch_kind == "qr":
+            return QRArch(n=self.n_bank, bx=self.bx, bw=self.bw, stats=stats,
+                          tech=tech, c_o=self.knob)
+        return CMArch(n=self.n_bank, bx=self.bx, bw=self.bw, stats=stats,
+                      tech=tech, v_wl=self.knob)
+
+
+def _mk_arch(kind: str, n_bank: int, bx: int, bw: int, stats, tech, knob) -> IMCArch:
+    if kind == "qs":
+        return QSArch(n=n_bank, bx=bx, bw=bw, stats=stats, tech=tech, v_wl=knob)
+    if kind == "qr":
+        return QRArch(n=n_bank, bx=bx, bw=bw, stats=stats, tech=tech, c_o=knob)
+    if kind == "cm":
+        return CMArch(n=n_bank, bx=bx, bw=bw, stats=stats, tech=tech, v_wl=knob)
+    raise ValueError(kind)
+
+
+def _bank_reduction_energy(n_banks: int, width_bits: int, tech: TechParams) -> float:
+    """Digital adder-tree energy for combining n_banks partial DPs."""
+    return max(n_banks - 1, 0) * width_bits * tech.e_add_per_bit
+
+
+def evaluate_point(
+    kind: str,
+    n: int,
+    n_banks: int,
+    bx: int,
+    bw: int,
+    stats: SignalStats,
+    tech: TechParams,
+    knob: float,
+    snr_t_target_db: float,
+    gamma_db: float = 0.5,
+    max_rows: int = 512,
+) -> Optional[DesignPoint]:
+    """Returns a DesignPoint if the configuration meets the SNR target, else None."""
+    n_bank = int(math.ceil(n / n_banks))
+    if n_bank > max_rows or n_bank < 2:
+        return None
+    arch = _mk_arch(kind, n_bank, bx, bw, stats, tech, knob)
+
+    # banked composition: per-bank DP variance is sigma_yo^2/n_banks-ish; bank
+    # noises are independent => bank SNRs compose as the same SNR (both signal
+    # and noise scale with n_bank). SNR_a(total) = SNR_a(bank).
+    snr_a_db = arch.snr_a_db()
+    snr_A_db = arch.snr_A_db()
+    b_adc = arch.b_adc_min(gamma_db)
+    snr_t_db = arch.snr_T_db(b_adc)
+    if not math.isfinite(snr_t_db) or snr_t_db < snr_t_target_db:
+        return None
+
+    e_bank = arch.energy_per_dp(b_adc)
+    width = b_adc + int(math.ceil(math.log2(max(n_banks, 2))))
+    energy = n_banks * e_bank + _bank_reduction_energy(n_banks, width, tech)
+    # banks operate in parallel; reduction adds one tree of log2(n_banks) adds
+    delay = arch.delay_per_dp(b_adc) + math.ceil(math.log2(max(n_banks, 1)) or 0) * 1e-10
+    return DesignPoint(
+        arch_kind=kind,
+        n=n,
+        n_bank=n_bank,
+        n_banks=n_banks,
+        bx=bx,
+        bw=bw,
+        b_adc=b_adc,
+        knob=knob,
+        tech=tech.name,
+        snr_a_db=snr_a_db,
+        snr_A_db=snr_A_db,
+        snr_t_db=snr_t_db,
+        energy_per_dp=energy,
+        delay_per_dp=delay,
+        edp=energy * delay,
+    )
+
+
+def optimize(
+    n: int,
+    snr_t_target_db: float,
+    stats: SignalStats = UNIFORM_STATS,
+    tech: TechParams = TECH_65NM,
+    kinds: Iterable[str] = ("qs", "qr", "cm"),
+    bx: Optional[int] = None,
+    bw: Optional[int] = None,
+    objective: str = "energy",  # "energy" | "edp" | "delay"
+    max_rows: int = 512,
+) -> Optional[DesignPoint]:
+    """Exhaustive grid search over (kind x knob x banking), min-objective subject
+    to SNR_T >= target.  B_x/B_w default to the SSIII-B assignment for the target."""
+    if bx is None or bw is None:
+        pa = prec.assign_precisions(snr_t_target_db + 3.0, n, stats)
+        bx = bx or pa.bx
+        bw = bw or pa.bw
+
+    best: Optional[DesignPoint] = None
+    for kind in kinds:
+        knobs = C_O_GRID if kind == "qr" else V_WL_GRID
+        for knob in knobs:
+            for n_banks in BANK_SPLITS:
+                pt = evaluate_point(
+                    kind, n, n_banks, bx, bw, stats, tech, knob,
+                    snr_t_target_db, max_rows=max_rows,
+                )
+                if pt is None:
+                    continue
+                key = {
+                    "energy": pt.energy_per_dp,
+                    "edp": pt.edp,
+                    "delay": pt.delay_per_dp,
+                }[objective]
+                best_key = None if best is None else {
+                    "energy": best.energy_per_dp,
+                    "edp": best.edp,
+                    "delay": best.delay_per_dp,
+                }[objective]
+                if best is None or key < best_key:
+                    best = pt
+    return best
+
+
+def pareto_sweep(
+    n: int,
+    stats: SignalStats = UNIFORM_STATS,
+    tech: TechParams = TECH_65NM,
+    kinds: Iterable[str] = ("qs", "qr", "cm"),
+    targets_db: Iterable[float] = tuple(range(8, 44, 2)),
+):
+    """Energy-vs-SNR_T pareto frontier (the Fig. 13-style trade-off curve)."""
+    out = []
+    for t in targets_db:
+        pt = optimize(n, t, stats=stats, tech=tech, kinds=kinds)
+        if pt is not None:
+            out.append((t, pt))
+    return out

@@ -1,0 +1,167 @@
+"""Mapping matmuls onto IMC bit-cell arrays: bank tiling, and whole-model
+energy/delay/SNR rollups (beyond-paper extension of SSV-C to full architectures).
+
+A (K x M) weight matrix deployed on R-row x C-col SRAM banks occupies
+ceil(K/R) x ceil(M*B_w/C) banks (QS-Arch stores B_w columns per output).  A
+T-token forward pass executes T dot products per output column; banks operate in
+parallel, K-direction partials reduce digitally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+from repro.core.design import DesignPoint, optimize
+from repro.core.compute_models import TechParams, TECH_65NM
+from repro.core.quant import SignalStats, UNIFORM_STATS
+
+
+@dataclasses.dataclass(frozen=True)
+class BankSpec:
+    rows: int = 512  # paper SSV: 512-row SRAM array
+    cols: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulShape:
+    """One linear layer: y[M] = W[K, M]^T x[K], executed for `calls` tokens."""
+
+    name: str
+    k: int
+    m: int
+    calls: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerReport:
+    name: str
+    k: int
+    m: int
+    calls: int
+    n_banks_k: int
+    n_banks_m: int
+    design: DesignPoint
+    energy_j: float
+    delay_s: float
+    snr_t_db: float
+
+    @property
+    def energy_per_mac_j(self) -> float:
+        return self.energy_j / (self.k * self.m * self.calls)
+
+
+def map_matmul(
+    shape: MatmulShape,
+    snr_t_target_db: float,
+    bank: BankSpec = BankSpec(),
+    stats: SignalStats = UNIFORM_STATS,
+    tech: TechParams = TECH_65NM,
+    kinds=("qs", "qr", "cm"),
+    design: Optional[DesignPoint] = None,
+) -> Optional[LayerReport]:
+    """Tile one matmul onto banks and cost it at the optimal design point.
+
+    The DP dimension per bank is min(K, rows); K-direction tiling reduces
+    digitally (handled inside `optimize` via its banking dimension when
+    K <= rows*max_banks, otherwise we tile explicitly here).
+    """
+    n_banks_k = int(math.ceil(shape.k / bank.rows))
+    n_bank_rows = int(math.ceil(shape.k / n_banks_k))
+    if design is None:
+        design = optimize(
+            n=shape.k,
+            snr_t_target_db=snr_t_target_db,
+            stats=stats,
+            tech=tech,
+            kinds=kinds,
+            max_rows=bank.rows,
+        )
+    if design is None:
+        return None
+    arch = design.arch(stats)
+    bw = design.bw
+    cols_per_out = bw if design.arch_kind == "qs" else 1
+    n_banks_m = int(math.ceil(shape.m * cols_per_out / bank.cols))
+
+    # per-DP energy already includes the K-direction bank reduction (design.n_banks)
+    e_dp = design.energy_per_dp
+    energy = e_dp * shape.m * shape.calls
+    # all M columns within a bank convert in column-parallel; bank-tiles in M are
+    # independent banks (parallel); K-direction reduction is in the design point.
+    delay = design.delay_per_dp * shape.calls
+    return LayerReport(
+        name=shape.name,
+        k=shape.k,
+        m=shape.m,
+        calls=shape.calls,
+        n_banks_k=design.n_banks,
+        n_banks_m=n_banks_m,
+        design=design,
+        energy_j=energy,
+        delay_s=delay,
+        snr_t_db=design.snr_t_db,
+    )
+
+
+@dataclasses.dataclass
+class ModelReport:
+    layers: List[LayerReport]
+
+    @property
+    def total_energy_j(self) -> float:
+        return sum(l.energy_j for l in self.layers)
+
+    @property
+    def total_macs(self) -> int:
+        return sum(l.k * l.m * l.calls for l in self.layers)
+
+    @property
+    def energy_per_mac_j(self) -> float:
+        return self.total_energy_j / max(self.total_macs, 1)
+
+    @property
+    def tops_per_watt(self) -> float:
+        """2 ops per MAC."""
+        return 2.0 / self.energy_per_mac_j / 1e12
+
+    @property
+    def min_snr_t_db(self) -> float:
+        return min(l.snr_t_db for l in self.layers)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "layers": len(self.layers),
+            "total_energy_j": self.total_energy_j,
+            "energy_per_mac_fj": self.energy_per_mac_j * 1e15,
+            "tops_per_watt": self.tops_per_watt,
+            "min_snr_t_db": self.min_snr_t_db,
+        }
+
+
+def map_model(
+    shapes: List[MatmulShape],
+    snr_t_target_db: float,
+    bank: BankSpec = BankSpec(),
+    stats: SignalStats = UNIFORM_STATS,
+    tech: TechParams = TECH_65NM,
+    kinds=("qs", "qr", "cm"),
+) -> ModelReport:
+    """Cost a whole model (list of matmul shapes) on IMC hardware.
+
+    Design points are cached per distinct K (the optimizer only depends on the
+    DP dimension), so 60-layer models cost ~3 optimizer calls.
+    """
+    cache: Dict[int, Optional[DesignPoint]] = {}
+    reports = []
+    for s in shapes:
+        if s.k not in cache:
+            cache[s.k] = optimize(
+                n=s.k, snr_t_target_db=snr_t_target_db, stats=stats, tech=tech,
+                kinds=kinds, max_rows=bank.rows,
+            )
+        d = cache[s.k]
+        r = map_matmul(s, snr_t_target_db, bank, stats, tech, kinds, design=d)
+        if r is not None:
+            reports.append(r)
+    return ModelReport(layers=reports)

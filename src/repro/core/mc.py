@@ -1,0 +1,288 @@
+"""Sample-accurate Monte Carlo simulation of the IMC architectures (paper SSV-A,
+Fig. 8): the 'S' curves that validate the Table III 'E' expressions.
+
+Each simulator draws an ensemble of circuit instances (spatial mismatch is fixed
+per instance, temporal noise redrawn per evaluation), pushes real operand vectors
+through the *physical* signal chain of eqs. (17) / (23) - including the
+nonlinear clipping and the ADC - and returns the reconstructed DP outputs, from
+which empirical SNRs are computed.
+
+Everything is jax.vmap-vectorized over ensemble instances and jit-compatible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.archs import CMArch, QRArch, QSArch
+from repro.core.compute_models import K_BOLTZMANN
+from repro.core.quant import QuantSpec, bit_planes
+
+
+# ---------------------------------------------------------------------------
+# ADC helper: clipped uniform quantizer in physical units
+# ---------------------------------------------------------------------------
+
+
+def adc_quantize(v, b_adc: int, v_lo: float, v_hi: float):
+    """B_ADC-bit uniform ADC over [v_lo, v_hi] (values beyond the range clip)."""
+    span = v_hi - v_lo
+    delta = span / (2.0**b_adc)
+    code = jnp.clip(jnp.round((v - v_lo) / delta), 0, 2.0**b_adc - 1)
+    return v_lo + code * delta
+
+
+# ---------------------------------------------------------------------------
+# QS-Arch sample-accurate simulator (eq. 17 per bit plane)
+# ---------------------------------------------------------------------------
+
+
+def mc_qs_arch(
+    key: jax.Array,
+    x: jax.Array,  # (ens, N) unsigned in [0, x_max]
+    w: jax.Array,  # (ens, N) signed in [-w_max, w_max]
+    arch: QSArch,
+    b_adc: Optional[int] = None,
+    include_adc: bool = True,
+):
+    """Returns (y_hat, y_ideal): the IMC-computed DP and the FL DP, per instance.
+
+    Physical chain per (weight-bit i, input-bit j) plane:
+      per-cell discharge dv_unit * (1 + i_k/I) * (1 + t_k/T) for active cells
+      + thermal noise, clipped at dv_bl_max, ADC-quantized, then power-of-two
+      recombined and rescaled to algorithmic units.
+    """
+    ens, n = x.shape
+    qs = arch.qs
+    tech = arch.tech
+    if b_adc is None:
+        b_adc = arch.b_adc_min()
+
+    xspec = QuantSpec(arch.bx, signed=False, max_val=arch.stats.x_max)
+    wspec = QuantSpec(arch.bw, signed=True, max_val=arch.stats.w_max)
+    xc = jnp.clip(jnp.round(x / xspec.delta), xspec.code_min, xspec.code_max)
+    wc = jnp.clip(jnp.round(w / wspec.delta), wspec.code_min, wspec.code_max)
+
+    xb, xw_weights = bit_planes(xc, arch.bx, signed=False)  # (Bx, ens, N)
+    wb, ww_weights = bit_planes(wc, arch.bw, signed=True)  # (Bw, ens, N)
+
+    k_cur, k_pw, k_th = jax.random.split(key, 3)
+    # spatial current mismatch: fixed per instance per cell
+    cur_mis = 1.0 + qs.sigma_d * jax.random.normal(k_cur, (ens, n))
+    # temporal pulse-width mismatch: per cell per plane-evaluation
+    pw_mis = 1.0 + (qs.sigma_t() / qs.t_eff) * jax.random.normal(
+        k_pw, (arch.bx, ens, n)
+    )
+    # NOTE: the deterministic rise/fall-time loss (eq. 19) is folded into
+    # dv_unit = I*T_eff/C (known, compensated digitally; paper: "can be
+    # mitigated by carefully designing the WL pulse generators").
+    dv_unit = qs.dv_unit
+    dv_max = tech.dv_bl_max
+
+    # active-cell discharge per plane (i, j): sum_k wb_i xb_j * per-cell gain
+    # (ens, N) contributions -> (Bw, Bx, ens)
+    def plane_discharge(wbi, xbj, pwj):
+        contrib = wbi * xbj * cur_mis * pwj  # (ens, N)
+        v = dv_unit * jnp.sum(contrib, axis=-1)  # (ens,)
+        return v
+
+    v_planes = jax.vmap(
+        lambda wbi: jax.vmap(lambda xbj, pwj: plane_discharge(wbi, xbj, pwj))(
+            xb, pw_mis
+        )
+    )(wb)  # (Bw, Bx, ens)
+
+    # integrated thermal noise per plane evaluation
+    sigma_th = qs.sigma_theta_volts(n)
+    v_planes = v_planes + sigma_th * jax.random.normal(k_th, v_planes.shape)
+
+    # headroom clipping (eq. 17): v_a = min(V_o, V_o,max)
+    v_planes = jnp.minimum(v_planes, dv_max)
+
+    if include_adc:
+        v_c = arch.v_c_counts() * dv_unit
+        v_planes = adc_quantize(v_planes, b_adc, 0.0, v_c)
+
+    counts = v_planes / dv_unit  # back to unit-discharge counts
+    # digital power-of-two recombination: y_code = sum_{i,j} ww_i xw_j counts_ij
+    y_code = jnp.einsum("i,j,ije->e", ww_weights, xw_weights, counts)
+    y_hat = y_code * xspec.delta * wspec.delta
+
+    y_ideal = jnp.sum(w * x, axis=-1)
+    return y_hat, y_ideal
+
+
+# ---------------------------------------------------------------------------
+# QR-Arch sample-accurate simulator (eq. 23 per weight-bit plane)
+# ---------------------------------------------------------------------------
+
+
+def mc_qr_arch(
+    key: jax.Array,
+    x: jax.Array,  # (ens, N)
+    w: jax.Array,  # (ens, N)
+    arch: QRArch,
+    b_adc: Optional[int] = None,
+    include_adc: bool = True,
+):
+    """Charge redistribution across N caps per weight-bit plane:
+    V = sum_j (C + c_j)(V_j + v_th,j + v_inj,j) / sum_j (C + c_j), V_j = x_j w^_i V_dd.
+    """
+    ens, n = x.shape
+    qr = arch.qr
+    tech = arch.tech
+    if b_adc is None:
+        b_adc = arch.b_adc_min()
+
+    xspec = QuantSpec(arch.bx, signed=False, max_val=arch.stats.x_max)
+    wspec = QuantSpec(arch.bw, signed=True, max_val=arch.stats.w_max)
+    xq = jnp.clip(jnp.round(x / xspec.delta), xspec.code_min, xspec.code_max) * xspec.delta
+    wc = jnp.clip(jnp.round(w / wspec.delta), wspec.code_min, wspec.code_max)
+    wb, ww_weights = bit_planes(wc, arch.bw, signed=True)  # (Bw, ens, N)
+
+    k_cap, k_th, k_inj = jax.random.split(key, 3)
+    caps = qr.c_o + qr.sigma_c * jax.random.normal(k_cap, (ens, n))  # spatial
+    caps = jnp.maximum(caps, 0.1 * qr.c_o)
+
+    v_dd = tech.v_dd
+
+    def plane_voltage(wbi, kth):
+        v_j = (xq / arch.stats.x_max) * wbi * v_dd  # (ens, N) in volts
+        v_th = qr.sigma_theta_volts * jax.random.normal(kth, (ens, n))
+        v_inj = tech.inj_p * tech.wl_cox * (v_dd - tech.v_t - v_j) / caps
+        v_inj = v_inj * wbi  # switch only toggles for active cells
+        num = jnp.sum(caps * (v_j + v_th + v_inj), axis=-1)
+        den = jnp.sum(caps, axis=-1)
+        return num / den  # (ens,)
+
+    keys = jax.random.split(k_th, arch.bw)
+    v_planes = jax.vmap(plane_voltage)(wb, keys)  # (Bw, ens)
+
+    if include_adc:
+        v_c = arch.v_c_volts()
+        mu = float(arch.stats.mu_x) * v_dd / 2.0  # plane mean (w-bit ~ Bern(1/2))
+        v_planes = adc_quantize(v_planes, b_adc, mu - v_c, mu + v_c)
+
+    # normalize: plane DP estimate = V * N / V_dd (in x-normalized count units)
+    plane_dp = v_planes * n / v_dd * arch.stats.x_max
+    y_code = jnp.einsum("i,ie->e", ww_weights, plane_dp)
+    y_hat = y_code * wspec.delta
+
+    y_ideal = jnp.sum(w * x, axis=-1)
+    return y_hat, y_ideal
+
+
+# ---------------------------------------------------------------------------
+# CM sample-accurate simulator (QS multi-bit column + QR aggregation)
+# ---------------------------------------------------------------------------
+
+
+def mc_cm(
+    key: jax.Array,
+    x: jax.Array,  # (ens, N)
+    w: jax.Array,  # (ens, N)
+    arch: CMArch,
+    b_adc: Optional[int] = None,
+    include_adc: bool = True,
+):
+    """CM: per-column POT-weighted QS discharge encodes |w_j| on BL / BLB
+    (sign via differential), clipped at dv_bl_max; per-column mixed-signal
+    multiply by x_j; QR aggregation across N columns; single ADC conversion.
+    """
+    ens, n = x.shape
+    qs = arch.qs
+    tech = arch.tech
+    if b_adc is None:
+        b_adc = arch.b_adc_min()
+
+    xspec = QuantSpec(arch.bx, signed=False, max_val=arch.stats.x_max)
+    wspec = QuantSpec(arch.bw, signed=True, max_val=arch.stats.w_max)
+    xq = jnp.clip(jnp.round(x / xspec.delta), xspec.code_min, xspec.code_max) * xspec.delta
+    wc = jnp.clip(jnp.round(w / wspec.delta), wspec.code_min, wspec.code_max)
+
+    # weight magnitude bit planes (sign handled differentially: noise identical)
+    wmag = jnp.abs(wc)
+    wsign = jnp.sign(wc) + (wc == 0)
+    wb, wmag_weights = bit_planes(wmag, arch.bw, signed=False)  # (Bw, ens, N)
+
+    k_cur, k_th, k_cap = jax.random.split(key, 3)
+    cur_mis = 1.0 + qs.sigma_d * jax.random.normal(k_cur, (ens, arch.bw, n))
+
+    dv_unit = qs.dv_unit
+    # POT pulse widths: bit i uses 2^i T0 => discharge 2^i dv_unit per active bit
+    pot = jnp.asarray(wmag_weights).reshape(1, arch.bw, 1)
+    dv_col = dv_unit * jnp.sum(jnp.transpose(wb, (1, 0, 2)) * pot * cur_mis, axis=1)
+    # (ens, N) column discharges encoding |w| in dv_unit counts
+    dv_col = jnp.minimum(dv_col, tech.dv_bl_max)  # headroom clip (eq. 17)
+
+    # mixed-signal multiply by x (charge-domain scaling) + QR aggregation
+    qr_c = 3e-15
+    sig_c = tech.pelgrom_kappa * np.sqrt(qr_c)
+    caps = qr_c + sig_c * jax.random.normal(k_cap, (ens, n))
+    caps = jnp.maximum(caps, 0.1 * qr_c)
+    v_mult = dv_col * (xq / arch.stats.x_max) * wsign
+    v_th = np.sqrt(K_BOLTZMANN * tech.temp / qr_c) * jax.random.normal(k_th, (ens, n))
+    v_o = jnp.sum(caps * (v_mult + v_th), axis=-1) / jnp.sum(caps, axis=-1)
+
+    if include_adc:
+        v_c = arch.v_c_volts()
+        v_o = adc_quantize(v_o, b_adc, -v_c, v_c)
+
+    # rescale: V_o = dv_unit/(N x_max) sum_k wc_k x_k  =>  y = Delta_w sum wc x
+    y_hat = v_o * n * arch.stats.x_max / dv_unit * wspec.delta
+
+    y_ideal = jnp.sum(w * x, axis=-1)
+    return y_hat, y_ideal
+
+
+# ---------------------------------------------------------------------------
+# Ensemble drivers
+# ---------------------------------------------------------------------------
+
+
+def sample_operands(key, ens: int, n: int, stats, dist: str = "uniform"):
+    """Draw operand ensembles matching a SignalStats description."""
+    kx, kw = jax.random.split(key)
+    if dist == "uniform":
+        x = jax.random.uniform(kx, (ens, n), minval=0.0, maxval=stats.x_max)
+        w = jax.random.uniform(kw, (ens, n), minval=-stats.w_max, maxval=stats.w_max)
+    elif dist == "gaussian":
+        sig_w = float(np.sqrt(stats.var_w))
+        x = jnp.clip(
+            jnp.abs(jax.random.normal(kx, (ens, n))) * stats.x_max / 4.0,
+            0.0,
+            stats.x_max,
+        )
+        w = jnp.clip(
+            jax.random.normal(kw, (ens, n)) * sig_w, -stats.w_max, stats.w_max
+        )
+    else:
+        raise ValueError(dist)
+    return x, w
+
+
+def empirical_snrs(key, arch, simulate, ens: int = 1000, b_adc=None, dist="uniform"):
+    """Run a simulator and report empirical (SNR_a-ish pre/post-ADC) values in dB.
+
+    Returns dict with snr_T (full chain) and snr_A (chain without ADC).
+    """
+    k_ops, k_sim1, k_sim2 = jax.random.split(key, 3)
+    x, w = sample_operands(k_ops, ens, arch.n, arch.stats, dist)
+    y_full, y_ideal = simulate(k_sim1, x, w, arch, b_adc=b_adc, include_adc=True)
+    y_pre, _ = simulate(k_sim2, x, w, arch, b_adc=b_adc, include_adc=False)
+
+    def snr_db(y_hat):
+        err = y_hat - y_ideal
+        err = err - jnp.mean(err)
+        sig = y_ideal - jnp.mean(y_ideal)
+        return 10.0 * jnp.log10(jnp.mean(sig**2) / jnp.mean(err**2))
+
+    return {
+        "snr_T_db": float(snr_db(y_full)),
+        "snr_A_db": float(snr_db(y_pre)),
+    }

@@ -1,0 +1,2 @@
+"""Deterministic sharded data pipeline."""
+from repro.data.pipeline import DataConfig, MemmapCorpus, Prefetcher, SyntheticLM, host_slice, make_source  # noqa: F401

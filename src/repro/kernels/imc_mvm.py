@@ -1,0 +1,267 @@
+"""Pallas TPU kernels for IMC-simulated matrix multiplies.
+
+Two kernels:
+
+  imc_bitserial_matmul - bit-exact QS-Arch simulation (paper SSIV-B2): per
+      (weight-bit x input-bit) plane binary matmuls on the MXU, per-plane
+      headroom clipping, additive analog noise, per-plane ADC transfer, and
+      signed power-of-two digital recombination, fused over SRAM banks.
+
+  imc_analytic_matmul - the fast path: quantized-code matmul with the *folded*
+      Gaussian analog-noise model (variance from repro.core.archs analytics)
+      and an MPC-clipped output ADC; one MXU matmul per (K-tile) plus VPU
+      epilogue.
+
+TPU mapping notes (hardware adaptation, DESIGN.md SS3):
+  * K is tiled at the SRAM bank height (rows=512, a multiple of the 128-wide
+    MXU); M/B tiles default to 128.
+  * bit planes are extracted in-register (VPU) from integer-valued f32 codes;
+    each plane matmul is an MXU op with f32 accumulation. (On real TPU an int8
+    path would halve VMEM traffic; kept f32 for bit-exact CPU validation -
+    see EXPERIMENTS.md SSPerf for the int8 variant discussion.)
+  * the per-plane nonlinearities (clip, noise add, ADC) are VPU elementwise ops
+    on the (B_t, M_t) accumulator tile between MXU calls - they never leave
+    VMEM.
+  * grid = (B_tiles, M_tiles, n_banks) with the bank dimension innermost:
+    output tiles are revisited consecutively and accumulated in place (digital
+    cross-bank reduction).
+
+Validated in interpret mode against repro.kernels.ref oracles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import AnalyticSpec, BitSerialSpec
+
+DEFAULT_TILE_B = 128
+DEFAULT_TILE_M = 128
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# bit-serial kernel
+# ---------------------------------------------------------------------------
+
+
+def _bitserial_kernel(
+    x_ref,  # (B_t, rows) f32 integer codes
+    w_ref,  # (rows, M_t) f32 integer codes
+    g_ref,  # (rows, M_t) f32 per-cell current gain, or dummy
+    n_ref,  # (1, Bw*Bx, B_t, M_t) f32 per-plane temporal noise (counts), or dummy
+    o_ref,  # (B_t, M_t) f32 accumulator (code units)
+    *,
+    spec: BitSerialSpec,
+    has_gain: bool,
+    has_noise: bool,
+):
+    bank = pl.program_id(2)
+
+    @pl.when(bank == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ww, xw = spec.plane_weights()
+    x = x_ref[...]
+    w = w_ref[...]
+
+    # offset-binary representatives for plane extraction
+    w_u = w + 2.0 ** (spec.bw - 1)
+    x_u = x + 2.0 ** (spec.bx - 1) if spec.x_signed else x
+
+    acc = jnp.zeros_like(o_ref)
+    for i in range(spec.bw):
+        wplane = jnp.mod(jnp.floor(w_u / (2.0**i)), 2.0)
+        if i == spec.bw - 1:
+            wplane = 1.0 - wplane  # two's complement sign plane
+        if has_gain:
+            # spatial bit-cell current mismatch (eq. 18): fixed per cell, so
+            # it multiplies the plane operand (correlated across planes)
+            wplane = wplane * g_ref[...]
+        for j in range(spec.bx):
+            xplane = jnp.mod(jnp.floor(x_u / (2.0**j)), 2.0)
+            if spec.x_signed and j == spec.bx - 1:
+                xplane = 1.0 - xplane
+            # MXU: (B_t, rows) @ (rows, M_t) binary-plane DP in counts
+            dp = jnp.dot(xplane, wplane, preferred_element_type=jnp.float32)
+            # VPU epilogue: headroom clip -> analog noise -> ADC transfer
+            dp = jnp.minimum(dp, spec.k_h)
+            if has_noise:
+                dp = dp + n_ref[0, i * spec.bx + j]
+                dp = jnp.maximum(dp, 0.0)
+            if spec.apply_adc:
+                delta = spec.v_c / (2.0**spec.b_adc)
+                code = jnp.clip(
+                    jnp.round(dp / delta - 0.5), 0.0, 2.0**spec.b_adc - 1
+                )
+                dp = (code + 0.5) * delta
+            acc = acc + (ww[i] * xw[j]) * dp
+    o_ref[...] += acc
+
+
+def imc_bitserial_matmul(
+    x_codes: jax.Array,  # (B, K) f32 integer codes
+    w_codes: jax.Array,  # (K, M) f32 integer codes
+    w_gain: Optional[jax.Array],  # (K, M) per-cell gain (1+eps) or None
+    noise: Optional[jax.Array],  # (n_banks, Bw*Bx, B, M) f32 or None
+    spec: BitSerialSpec,
+    tile_b: int = DEFAULT_TILE_B,
+    tile_m: int = DEFAULT_TILE_M,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused bit-serial IMC matmul; returns (B, M) in code units.
+
+    B, M, K are padded to tile multiples internally; K pads with zero codes
+    (inactive rows - physically, unused bank rows).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    b_sz, k = x_codes.shape
+    _, m = w_codes.shape
+    n_banks = -(-k // spec.rows)
+    bp = -(-b_sz // tile_b) * tile_b
+    mp = -(-m // tile_m) * tile_m
+    kp = n_banks * spec.rows
+    x_p = jnp.pad(x_codes.astype(jnp.float32), ((0, bp - b_sz), (0, kp - k)))
+    w_p = jnp.pad(w_codes.astype(jnp.float32), ((0, kp - k), (0, mp - m)))
+    has_gain = w_gain is not None
+    has_noise = noise is not None
+    operands = [x_p, w_p]
+    in_specs = [
+        pl.BlockSpec((tile_b, spec.rows), lambda b, mm, kk: (b, kk)),
+        pl.BlockSpec((spec.rows, tile_m), lambda b, mm, kk: (kk, mm)),
+    ]
+    if has_gain:
+        g_p = jnp.pad(
+            w_gain.astype(jnp.float32),
+            ((0, kp - k), (0, mp - m)),
+            constant_values=1.0,
+        )
+        operands.append(g_p)
+        in_specs.append(
+            pl.BlockSpec((spec.rows, tile_m), lambda b, mm, kk: (kk, mm))
+        )
+    else:
+        operands.append(jnp.ones((1, 1), jnp.float32))
+        in_specs.append(pl.BlockSpec((1, 1), lambda b, mm, kk: (0, 0)))
+    if has_noise:
+        n_p = jnp.pad(
+            noise.astype(jnp.float32),
+            ((0, 0), (0, 0), (0, bp - b_sz), (0, mp - m)),
+        )
+        operands.append(n_p)
+        in_specs.append(
+            pl.BlockSpec(
+                (1, spec.bw * spec.bx, tile_b, tile_m),
+                lambda b, mm, kk: (kk, 0, b, mm),
+            )
+        )
+    else:
+        operands.append(jnp.zeros((1, 1, 1, 1), jnp.float32))
+        in_specs.append(pl.BlockSpec((1, 1, 1, 1), lambda b, mm, kk: (0, 0, 0, 0)))
+
+    grid = (bp // tile_b, mp // tile_m, n_banks)
+    out = pl.pallas_call(
+        functools.partial(
+            _bitserial_kernel, spec=spec, has_gain=has_gain, has_noise=has_noise
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_b, tile_m), lambda b, mm, kk: (b, mm)),
+        out_shape=jax.ShapeDtypeStruct((bp, mp), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+    return out[:b_sz, :m]
+
+
+# ---------------------------------------------------------------------------
+# analytic-mode kernel
+# ---------------------------------------------------------------------------
+
+
+def _analytic_kernel(
+    x_ref,  # (B_t, K_t)
+    w_ref,  # (K_t, M_t)
+    n_ref,  # (B_t, M_t) standard-normal draws
+    o_ref,  # (B_t, M_t)
+    *,
+    spec: AnalyticSpec,
+    n_k: int,
+    has_noise: bool,
+):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kk == n_k - 1)
+    def _epilogue():
+        y = o_ref[...]
+        if has_noise and spec.sigma_out > 0.0:
+            y = y + spec.sigma_out * n_ref[...]
+        if spec.apply_adc:
+            c = spec.y_clip
+            delta = 2.0 * c / (2.0**spec.b_adc)
+            code = jnp.clip(
+                jnp.round(y / delta),
+                -(2.0 ** (spec.b_adc - 1)),
+                2.0 ** (spec.b_adc - 1) - 1,
+            )
+            y = code * delta
+        o_ref[...] = y
+
+
+def imc_analytic_matmul(
+    x_codes: jax.Array,  # (B, K)
+    w_codes: jax.Array,  # (K, M)
+    noise: Optional[jax.Array],  # (B, M) standard normal or None
+    spec: AnalyticSpec,
+    tile_b: int = DEFAULT_TILE_B,
+    tile_m: int = DEFAULT_TILE_M,
+    tile_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _interpret_default()
+    b_sz, k = x_codes.shape
+    _, m = w_codes.shape
+    bp = -(-b_sz // tile_b) * tile_b
+    mp = -(-m // tile_m) * tile_m
+    kp = -(-k // tile_k) * tile_k
+    x_p = jnp.pad(x_codes.astype(jnp.float32), ((0, bp - b_sz), (0, kp - k)))
+    w_p = jnp.pad(w_codes.astype(jnp.float32), ((0, kp - k), (0, mp - m)))
+    has_noise = noise is not None
+    if has_noise:
+        n_p = jnp.pad(noise.astype(jnp.float32), ((0, bp - b_sz), (0, mp - m)))
+    else:
+        n_p = jnp.zeros((bp, mp), jnp.float32)
+    n_k = kp // tile_k
+    out = pl.pallas_call(
+        functools.partial(
+            _analytic_kernel, spec=spec, n_k=n_k, has_noise=has_noise
+        ),
+        grid=(bp // tile_b, mp // tile_m, n_k),
+        in_specs=[
+            pl.BlockSpec((tile_b, tile_k), lambda b, mm, kk: (b, kk)),
+            pl.BlockSpec((tile_k, tile_m), lambda b, mm, kk: (kk, mm)),
+            pl.BlockSpec((tile_b, tile_m), lambda b, mm, kk: (b, mm)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, tile_m), lambda b, mm, kk: (b, mm)),
+        out_shape=jax.ShapeDtypeStruct((bp, mp), jnp.float32),
+        interpret=interpret,
+    )(x_p, w_p, n_p)
+    return out[:b_sz, :m]

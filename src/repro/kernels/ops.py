@@ -1,0 +1,153 @@
+"""Public jit'd wrappers around the IMC matmul kernels.
+
+These take real-valued activations/weights, perform the input quantization
+(paper SSII), derive per-plane noise sigmas from the core analytics, draw the
+noise operands, and dispatch to either the Pallas kernel or the pure-jnp
+oracle (ref.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import imc_mvm, ref
+from repro.kernels.ref import AnalyticSpec, BitSerialSpec, quantize_codes
+
+
+@dataclasses.dataclass(frozen=True)
+class IMCMatmulConfig:
+    """Runtime configuration of an IMC-simulated matmul (static under jit)."""
+
+    mode: str = "imc_bitserial"  # imc_bitserial | imc_analytic | fakequant
+    bx: int = 6
+    bw: int = 6
+    b_adc: int = 8
+    rows: int = 512
+    x_signed: bool = True  # LM activations are signed; paper mode uses False
+    # analog noise (normalized units; from repro.core.archs analytics)
+    sigma_d: float = 0.0  # per-cell relative current mismatch (eq. 18, spatial)
+    sigma_thermal_counts: float = 0.0  # per-plane thermal noise std (eq. 20)
+    k_h_counts: float = 1e9  # headroom clip in counts (bitserial)
+    v_c_counts: float = 1e9  # per-plane ADC range in counts (bitserial)
+    snr_a_db: Optional[float] = None  # analytic mode: folded analog SNR
+    y_clip_sigmas: float = 4.0  # MPC clip ratio (analytic mode)
+    use_kernel: bool = True
+    interpret: Optional[bool] = None
+
+
+def derive_config_from_arch(arch, x_signed: bool = True, use_kernel: bool = True):
+    """Build an IMCMatmulConfig from a core QSArch analytic design point."""
+    qs = arch.qs
+    return IMCMatmulConfig(
+        mode="imc_bitserial",
+        bx=arch.bx,
+        bw=arch.bw,
+        b_adc=arch.b_adc_min(),
+        rows=arch.n,
+        x_signed=x_signed,
+        sigma_d=float(qs.sigma_d),
+        sigma_thermal_counts=float(qs.sigma_theta_volts(arch.n) / qs.dv_unit),
+        k_h_counts=float(arch.k_h),
+        v_c_counts=float(arch.v_c_counts()),
+        snr_a_db=float(arch.snr_a_db()),
+        use_kernel=use_kernel,
+    )
+
+
+def _quantize_operands(x, w, cfg: IMCMatmulConfig, x_max=None, w_max=None):
+    if x_max is None:
+        x_max = jax.lax.stop_gradient(jnp.max(jnp.abs(x)) + 1e-9)
+    if w_max is None:
+        w_max = jax.lax.stop_gradient(jnp.max(jnp.abs(w)) + 1e-9)
+    xc, dx = quantize_codes(x, cfg.bx, cfg.x_signed, x_max)
+    wc, dw = quantize_codes(w, cfg.bw, True, w_max)
+    return xc, wc, dx, dw
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def imc_matmul(
+    x: jax.Array,  # (B, K) real
+    w: jax.Array,  # (K, M) real
+    cfg: IMCMatmulConfig,
+    key: Optional[jax.Array] = None,
+    x_max: Optional[jax.Array] = None,
+    w_max: Optional[jax.Array] = None,
+) -> jax.Array:
+    """IMC-simulated y = x @ w in real units.
+
+    ``key=None`` disables analog noise (quantization/clipping/ADC still apply).
+    """
+    b_sz, k = x.shape
+    _, m = w.shape
+    xc, wc, dx, dw = _quantize_operands(x, w, cfg, x_max, w_max)
+
+    if cfg.mode == "fakequant":
+        return jnp.dot(xc, wc, preferred_element_type=jnp.float32) * (dx * dw)
+
+    if cfg.mode == "imc_analytic":
+        sigma_yo_codes = jax.lax.stop_gradient(
+            jnp.std(jnp.dot(xc[: min(b_sz, 8)], wc)) + 1e-9
+        )
+        # folded analog noise: SNR_a = sigma_yo^2 / sigma_a^2
+        if cfg.snr_a_db is not None:
+            sigma_out = float(10.0 ** (-cfg.snr_a_db / 20.0))
+        else:
+            sigma_out = 0.0
+        spec = AnalyticSpec(
+            b_adc=cfg.b_adc,
+            sigma_out=sigma_out,  # scaled below by sigma_yo via noise operand
+            y_clip=cfg.y_clip_sigmas,  # in sigma_yo units, scaled below
+            apply_adc=True,
+        )
+        noise = None
+        if key is not None and sigma_out > 0.0:
+            noise = jax.random.normal(key, (b_sz, m), dtype=jnp.float32)
+        # spec constants (sigma_out, y_clip) are in sigma_yo units; scale the
+        # operands by 1/sigma_yo so they apply exactly while staying static.
+        xs = xc / sigma_yo_codes
+        if cfg.use_kernel:
+            y = imc_mvm.imc_analytic_matmul(xs, wc, noise, spec,
+                                            interpret=cfg.interpret)
+        else:
+            y = ref.imc_analytic_ref(xs, wc, noise, spec)
+        return y * sigma_yo_codes * (dx * dw)
+
+    if cfg.mode == "imc_bitserial":
+        n_banks = -(-k // cfg.rows)
+        spec = BitSerialSpec(
+            bx=cfg.bx,
+            bw=cfg.bw,
+            b_adc=cfg.b_adc,
+            rows=cfg.rows,
+            k_h=cfg.k_h_counts,
+            v_c=cfg.v_c_counts,
+            x_signed=cfg.x_signed,
+            apply_adc=True,
+        )
+        w_gain = None
+        noise = None
+        if key is not None:
+            k_sp, k_th = jax.random.split(key)
+            if cfg.sigma_d > 0.0:
+                # spatial per-cell current mismatch (fixed per chip instance -
+                # pass a persistent "chip key" for a fixed die)
+                w_gain = 1.0 + cfg.sigma_d * jax.random.normal(
+                    k_sp, (k, m), dtype=jnp.float32
+                )
+            if cfg.sigma_thermal_counts > 0.0:
+                noise = cfg.sigma_thermal_counts * jax.random.normal(
+                    k_th, (n_banks, cfg.bw * cfg.bx, b_sz, m), dtype=jnp.float32
+                )
+        if cfg.use_kernel:
+            y = imc_mvm.imc_bitserial_matmul(xc, wc, w_gain, noise, spec,
+                                             interpret=cfg.interpret)
+        else:
+            y = ref.imc_bitserial_ref(xc, wc, w_gain, noise, spec)
+        return y * (dx * dw)
+
+    raise ValueError(f"unknown mode {cfg.mode!r}")

@@ -1,0 +1,186 @@
+"""Pure-jnp oracles for the IMC matrix-multiply kernels.
+
+These implement exactly the same math as the Pallas kernels in imc_mvm.py and
+are the ground truth for the interpret-mode allclose sweeps in
+tests/test_kernels.py.  They are also usable directly (vmap/grad-able) when the
+kernel path is disabled.
+
+Shared semantics (QS-Arch bit-serial simulation, paper SSIV-B2):
+
+  y[b, m] = Delta_x Delta_w *
+      sum_banks  sum_{i<Bw, j<Bx}  s_i s_j 2^(i+j) *
+          ADC( min( xplane_j[b, :] . wplane_i[:, m], k_h ) + noise )
+
+with two's-complement bit planes (s = -1 for sign planes), per-plane headroom
+clipping at k_h counts, additive per-plane analog noise (operand), and a
+B_adc-bit ADC over [0, v_c] counts ([-v_c, v_c] when planes can be negative -
+they cannot: plane DPs are counts >= 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BitSerialSpec:
+    """Static configuration of the bit-serial IMC matmul."""
+
+    bx: int = 6
+    bw: int = 6
+    b_adc: int = 8
+    rows: int = 512  # bank height (DP dimension per bank)
+    k_h: float = 1e9  # headroom clip in unit-discharge counts (inf = no clip)
+    v_c: float = 1e9  # ADC full-scale in counts (>= k_h typically)
+    x_signed: bool = False  # unsigned (ReLU) vs signed activations
+    apply_adc: bool = True
+
+    @property
+    def n_x_planes(self) -> int:
+        return self.bx
+
+    @property
+    def n_w_planes(self) -> int:
+        return self.bw
+
+    def plane_weights(self):
+        """(w_weights[Bw], x_weights[Bx]) signed power-of-two recombination."""
+        ww = np.array([2.0**i for i in range(self.bw)])
+        ww[self.bw - 1] = -(2.0 ** (self.bw - 1))  # w always signed
+        xw = np.array([2.0**j for j in range(self.bx)])
+        if self.x_signed:
+            xw[self.bx - 1] = -(2.0 ** (self.bx - 1))
+        return ww, xw
+
+
+# ---------------------------------------------------------------------------
+# quantization helpers shared by ops.py (codes in float32, exact small ints)
+# ---------------------------------------------------------------------------
+
+
+def quantize_codes(v, bits: int, signed: bool, max_val):
+    """Uniform quantization to integer codes (float dtype)."""
+    if signed:
+        delta = max_val * 2.0 ** (1 - bits)
+        lo, hi = -(2.0 ** (bits - 1)), 2.0 ** (bits - 1) - 1
+    else:
+        delta = max_val * 2.0 ** (-bits)
+        lo, hi = 0.0, 2.0**bits - 1
+    return jnp.clip(jnp.round(v / delta), lo, hi), delta
+
+
+def unpack_plane(codes, j: int, bits: int, signed: bool):
+    """Extract bit plane j from integer codes; two's complement sign plane for
+    j == bits-1 when signed."""
+    u = codes + 2.0 ** (bits - 1) if signed else codes
+    b = jnp.mod(jnp.floor(u / (2.0**j)), 2.0)
+    if signed and j == bits - 1:
+        b = 1.0 - b
+    return b
+
+
+def adc_transfer(v, b_adc: int, v_c: float):
+    """B_adc-bit ADC over [0, v_c] counts."""
+    delta = v_c / (2.0**b_adc)
+    code = jnp.clip(jnp.round(v / delta - 0.5), 0.0, 2.0**b_adc - 1)
+    return (code + 0.5) * delta
+
+
+# ---------------------------------------------------------------------------
+# bit-serial oracle
+# ---------------------------------------------------------------------------
+
+
+def imc_bitserial_ref(
+    x_codes: jax.Array,  # (B, K) float32 integer codes
+    w_codes: jax.Array,  # (K, M) float32 integer codes
+    w_gain: Optional[jax.Array],  # (K, M) per-cell current gain (1 + eps) or None
+    noise: Optional[jax.Array],  # (n_banks, Bw*Bx, B, M) additive counts or None
+    spec: BitSerialSpec,
+) -> jax.Array:
+    """Returns the recombined integer-code DP (B, M) in *code units*
+    (caller multiplies by Delta_x*Delta_w to get real units).
+
+    ``w_gain`` models *spatial* bit-cell current mismatch (paper eq. 18): the
+    same cell gain multiplies that cell's contribution in every bit plane
+    (mismatch is fixed per physical cell), which is what makes the mismatch
+    noise recombine like the signal (Table III: sigma_eta_e^2 ~ N sigma_D^2/9).
+    ``noise`` models per-plane *temporal* noise (thermal, eq. 20) - independent
+    draws per plane evaluation.
+    """
+    b_sz, k = x_codes.shape
+    k2, m = w_codes.shape
+    assert k == k2, (k, k2)
+    n_banks = (k + spec.rows - 1) // spec.rows
+    pad = n_banks * spec.rows - k
+    if pad:
+        x_codes = jnp.pad(x_codes, ((0, 0), (0, pad)))
+        w_codes = jnp.pad(w_codes, ((0, pad), (0, 0)))
+        if w_gain is not None:
+            w_gain = jnp.pad(w_gain, ((0, pad), (0, 0)), constant_values=1.0)
+    ww, xw = spec.plane_weights()
+
+    acc = jnp.zeros((b_sz, m), dtype=jnp.float32)
+    for bank in range(n_banks):
+        sl = slice(bank * spec.rows, (bank + 1) * spec.rows)
+        xb = x_codes[:, sl]
+        wb = w_codes[sl, :]
+        gb = None if w_gain is None else w_gain[sl, :]
+        for i in range(spec.bw):
+            wplane = unpack_plane(wb, i, spec.bw, signed=True)
+            if gb is not None:
+                wplane = wplane * gb
+            for j in range(spec.bx):
+                xplane = unpack_plane(xb, j, spec.bx, signed=spec.x_signed)
+                dp = jnp.dot(xplane, wplane, preferred_element_type=jnp.float32)
+                dp = jnp.minimum(dp, spec.k_h)
+                if noise is not None:
+                    dp = dp + noise[bank, i * spec.bx + j]
+                    dp = jnp.maximum(dp, 0.0)
+                if spec.apply_adc:
+                    dp = adc_transfer(dp, spec.b_adc, spec.v_c)
+                acc = acc + (ww[i] * xw[j]) * dp
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# analytic-mode oracle: fakequant matmul + folded Gaussian noise + MPC ADC
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticSpec:
+    """Static config for the analytic (folded-noise) IMC matmul.
+
+    sigma_out: std of the folded analog noise in *code units* (x_code.w_code
+    space); y_clip: MPC clip level in code units (4 sigma_yo typically);
+    b_adc: output ADC precision.
+    """
+
+    b_adc: int = 8
+    sigma_out: float = 0.0
+    y_clip: float = 1e9
+    apply_adc: bool = True
+
+
+def imc_analytic_ref(
+    x_codes: jax.Array,  # (B, K)
+    w_codes: jax.Array,  # (K, M)
+    noise: Optional[jax.Array],  # (B, M) standard normal draws, or None
+    spec: AnalyticSpec,
+) -> jax.Array:
+    """y_code = ADC_MPC( x_codes @ w_codes + sigma_out * noise )."""
+    y = jnp.dot(x_codes, w_codes, preferred_element_type=jnp.float32)
+    if noise is not None and spec.sigma_out > 0.0:
+        y = y + spec.sigma_out * noise
+    if spec.apply_adc:
+        c = spec.y_clip
+        delta = 2.0 * c / (2.0**spec.b_adc)
+        code = jnp.clip(jnp.round(y / delta), -(2.0 ** (spec.b_adc - 1)),
+                        2.0 ** (spec.b_adc - 1) - 1)
+        y = code * delta
+    return y

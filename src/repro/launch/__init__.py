@@ -1,0 +1,1 @@
+"""Launch layer: meshes, sharding rules, steps, dry-run and drivers."""

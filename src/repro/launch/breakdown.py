@@ -1,0 +1,98 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+
+"""Collective/FLOP breakdown of one dry-run cell: per-while-loop costs with
+trip counts, the heaviest collective ops and their op_name provenance.
+The SSPerf profiling tool (the 'profile' of the hypothesis loop).
+
+  PYTHONPATH=src python -m repro.launch.breakdown --arch granite-20b \
+      --shape prefill_32k [--multi-pod]
+"""
+import argparse
+import collections
+import re
+
+import jax
+
+from repro import configs
+from repro.configs.shapes import SHAPES, input_specs
+from repro.launch import steps as steps_lib
+from repro.launch.hlo_analysis import HloModule, _shape_list, _bytes_of
+from repro.launch.mesh import make_production_mesh
+from repro.models import init_cache, init_params
+
+
+def lower_cell(arch, shape_name, multi_pod=False, fsdp=True, layout=""):
+    from repro.launch.dryrun import make_layout_mesh
+
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = (make_layout_mesh(layout) if layout
+            else make_production_mesh(multi_pod=multi_pod))
+    sds = input_specs(cfg, shape)
+    if shape.kind == "train":
+        bundle = steps_lib.build_train_step(cfg, mesh, sds, fsdp=fsdp)
+        return bundle.step_fn.lower(bundle.state_shapes, sds)
+    if shape.kind == "prefill":
+        bundle = steps_lib.build_prefill_step(cfg, mesh, shape, sds, fsdp=fsdp)
+        p_sds = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+        return bundle.step_fn.lower(p_sds, sds)
+    bundle = steps_lib.build_decode_step(cfg, mesh, shape, sds, fsdp=fsdp)
+    p_sds = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    c_sds = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    return bundle.step_fn.lower(p_sds, sds, c_sds)
+
+
+def report(hlo_text: str, top: int = 12):
+    mod = HloModule(hlo_text)
+    print("== while loops by weighted collective bytes ==")
+    entries = []
+    for name, ops in mod.comps.items():
+        for op in ops:
+            if op.kind != "while":
+                continue
+            bm = re.search(r"body=%?([\w.\-]+)", op.rest)
+            if not bm:
+                continue
+            trip = mod._trip_count_of(op, mod._cond_consts)
+            c = mod.comp_cost(bm.group(1))
+            cb = sum(c.collective_bytes.values())
+            entries.append((cb * trip, name, bm.group(1), trip, c))
+    for total, parent, body, trip, c in sorted(entries, reverse=True)[:6]:
+        if total < 1e6:
+            continue
+        print(f"\n  while {body} (in {parent}) trip={trip:.0f} "
+              f"total={total/2**30:.2f} GiB flops/iter={c.flops:.3g}")
+        agg = collections.Counter()
+        for op2 in mod.comps[body]:
+            kind = op2.kind.replace("-start", "")
+            if kind in ("all-to-all", "all-gather", "all-reduce",
+                        "reduce-scatter", "collective-permute"):
+                b = _bytes_of(_shape_list(op2.result))
+                meta = re.search(r'op_name="([^"]+)"', op2.rest)
+                prov = (meta.group(1).split("/")[-2:] if meta else ["?"])
+                agg[(kind, op2.result[:48], "/".join(prov)[:70])] += b
+        for (kind, res, prov), b in agg.most_common(top):
+            print(f"    {kind:20s} {b/2**20:9.1f}MiB/iter {res}  <- {prov}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--layout", default="")
+    args = ap.parse_args()
+    lowered = lower_cell(args.arch, args.shape, args.multi_pod,
+                         fsdp=not args.no_fsdp, layout=args.layout)
+    compiled = lowered.compile()
+    report(compiled.as_text())
+
+
+if __name__ == "__main__":
+    main()

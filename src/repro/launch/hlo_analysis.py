@@ -1,0 +1,282 @@
+"""Post-SPMD HLO analysis: correct per-device FLOPs / traffic / collectives.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, regardless of
+trip count (verified experimentally - see EXPERIMENTS.md SSRoofline
+methodology), which under-counts scan-over-layers models by ~n_layers.  This
+module re-derives the quantities by walking the HLO computation graph:
+
+  * per-computation symbol tables resolve operand shapes (operands print as
+    bare %names in modern HLO),
+  * ``while`` ops multiply body+condition costs by the trip count, taken from
+    ``backend_config known_trip_count`` (fallback: max constant in the
+    condition computation),
+  * ``call``/``fusion``/``conditional`` recurse (conditional: max branch),
+  * FLOPs: 2 * |out| * prod(contracting dims) per dot; convolutions via
+    |out| * |kernel|,
+  * dot_bytes: operand+output bytes of dots (MXU-stream traffic proxy),
+  * collectives: output bytes + op counts per collective kind.
+
+All quantities are per-device (the module is the post-partitioning program).
+Validated in tests/test_hlo_analysis.py against hand-counted modules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 0.5, "u4": 0.5, "c64": 8, "c128": 16,
+}
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_LINE = re.compile(r"^\s+(?:ROOT )?%?([\w.\-]+) = (.+?) ([a-z0-9\-]+)\((.*)$")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(shapes) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _elems_of(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    dot_bytes_f32: float = 0.0  # f32 share (CPU-host bf16->f32 dot promotion)
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_bytes_f32: float = 0.0
+    collective_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.dot_bytes += mult * other.dot_bytes
+        self.dot_bytes_f32 += mult * other.dot_bytes_f32
+        self.collective_bytes_f32 += mult * other.collective_bytes_f32
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + mult * v
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = (
+                self.collective_counts.get(k, 0.0) + mult * v
+            )
+
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    result: str  # result shape text
+    kind: str
+    rest: str  # args + attributes text
+
+
+class HloModule:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[_Op]] = {}
+        self.entry: Optional[str] = None
+        self._split(hlo_text)
+        self._cost_cache: Dict[str, Costs] = {}
+
+    def _split(self, text: str):
+        cur_name: Optional[str] = None
+        cur_ops: List[_Op] = []
+        for line in text.splitlines():
+            if line and not line[0].isspace() and "(" in line and "{" in line:
+                m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+                if m:
+                    if cur_name:
+                        self.comps[cur_name] = cur_ops
+                    cur_name, cur_ops = m.group(2), []
+                    if m.group(1):
+                        self.entry = cur_name
+                    continue
+            if cur_name is None:
+                continue
+            if line.startswith("}"):
+                self.comps[cur_name] = cur_ops
+                cur_name, cur_ops = None, []
+                continue
+            m = _OP_LINE.match(line)
+            if m:
+                name, result, kind, rest = m.groups()
+                cur_ops.append(_Op(name, result, kind, rest))
+        if cur_name:
+            self.comps[cur_name] = cur_ops
+        if self.entry is None and self.comps:
+            self.entry = max(self.comps, key=lambda k: len(self.comps[k]))
+
+    # ------------------------------------------------------------------
+    def _symtab(self, name: str) -> Dict[str, str]:
+        return {op.name: op.result for op in self.comps.get(name, [])}
+
+    @staticmethod
+    def _trip_count_of(op: _Op, cond_lookup) -> float:
+        m = re.search(r'known_trip_count[^0-9]*"n":"(\d+)"', op.rest)
+        if m:
+            return float(m.group(1))
+        cm = re.search(r"condition=%?([\w.\-]+)", op.rest)
+        if cm:
+            consts = cond_lookup(cm.group(1))
+            if consts:
+                return float(max(consts))
+        return 1.0
+
+    def _cond_consts(self, cond_name: str) -> List[int]:
+        out = []
+        for op in self.comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", op.rest):
+                out.append(int(m.group(1)))
+            if op.kind == "constant":
+                m = re.search(r"\((\d+)\)", "(" + op.rest)
+                if m:
+                    out.append(int(m.group(1)))
+        return out
+
+    # ------------------------------------------------------------------
+    def comp_cost(self, name: str) -> Costs:
+        if name in self._cost_cache:
+            return self._cost_cache[name]
+        self._cost_cache[name] = Costs()  # cycle guard
+        total = Costs()
+        symtab = self._symtab(name)
+        for op in self.comps.get(name, []):
+            if op.kind == "dot":
+                args = op.rest.split("), ")[0]
+                opnames = _OPERANDS.findall(args)
+                out_shapes = _shape_list(op.result)
+                out_elems = sum(_elems_of(d) for _, d in out_shapes)
+                k = 1
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+                if cm and opnames:
+                    lhs_shape = _shape_list(symtab.get(opnames[0], ""))
+                    if lhs_shape:
+                        dims = lhs_shape[0][1]
+                        for idx in cm.group(1).split(","):
+                            if idx and int(idx) < len(dims):
+                                k *= dims[int(idx)]
+                total.flops += 2.0 * out_elems * k
+                opb = sum(
+                    _bytes_of(_shape_list(symtab.get(o, ""))) for o in opnames[:2]
+                )
+                b = _bytes_of(out_shapes) + opb
+                total.dot_bytes += b
+                f32b = _bytes_of([sh for sh in out_shapes if sh[0] == "f32"])
+                for o in opnames[:2]:
+                    f32b += _bytes_of(
+                        [sh for sh in _shape_list(symtab.get(o, ""))
+                         if sh[0] == "f32"]
+                    )
+                total.dot_bytes_f32 += f32b
+            elif op.kind == "convolution":
+                out_shapes = _shape_list(op.result)
+                out_elems = sum(_elems_of(d) for _, d in out_shapes)
+                opnames = _OPERANDS.findall(op.rest.split("), ")[0])
+                kern = _shape_list(symtab.get(opnames[1], "")) if len(opnames) > 1 else []
+                k_elems = _elems_of(kern[0][1]) if kern else 1
+                total.flops += 2.0 * out_elems * k_elems
+                total.dot_bytes += _bytes_of(out_shapes)
+            elif op.kind in _COLLECTIVES or (
+                op.kind.endswith("-start") and op.kind[:-6] in _COLLECTIVES
+            ):
+                key = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+                shapes = _shape_list(op.result)
+                b = _bytes_of(shapes)
+                total.collective_bytes[key] = (
+                    total.collective_bytes.get(key, 0.0) + b
+                )
+                total.collective_bytes_f32 += _bytes_of(
+                    [sh for sh in shapes if sh[0] == "f32"]
+                )
+                total.collective_counts[key] = (
+                    total.collective_counts.get(key, 0.0) + 1
+                )
+            elif op.kind == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", op.rest)
+                if bm:
+                    trip = self._trip_count_of(op, self._cond_consts)
+                    total.add(self.comp_cost(bm.group(1)), trip)
+            elif op.kind in ("call", "fusion", "async-start"):
+                tm = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", op.rest)
+                if tm:
+                    total.add(self.comp_cost(tm.group(1)))
+            elif op.kind == "conditional":
+                names = []
+                bm = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+                if bm:
+                    names = [x.strip().lstrip("%") for x in bm.group(1).split(",")]
+                else:
+                    for key in ("true_computation", "false_computation"):
+                        mm = re.search(key + r"=%?([\w.\-]+)", op.rest)
+                        if mm:
+                            names.append(mm.group(1))
+                costs = [self.comp_cost(n) for n in names if n in self.comps]
+                if costs:
+                    total.add(max(costs, key=lambda c: c.flops + c.dot_bytes))
+        self._cost_cache[name] = total
+        return total
+
+    def entry_cost(self) -> Costs:
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> Dict:
+    mod = HloModule(hlo_text)
+    c = mod.entry_cost()
+    total_coll = sum(c.collective_bytes.values())
+    return {
+        "flops": c.flops,
+        "dot_bytes": c.dot_bytes,
+        # CPU-host lowering promotes bf16 dot operands (and the collectives
+        # on them) to f32; on the TPU target these tensors are bf16.  The
+        # corrected figures halve the f32 share (exact for all-bf16 programs;
+        # see EXPERIMENTS.md SSRoofline methodology).
+        "dot_bytes_bf16c": c.dot_bytes - 0.5 * c.dot_bytes_f32,
+        "collective_bytes": dict(c.collective_bytes),
+        "collective_bytes_f32": c.collective_bytes_f32,
+        "collective_bf16c_scale": (
+            (total_coll - 0.5 * c.collective_bytes_f32) / total_coll
+            if total_coll else 1.0
+        ),
+        "collective_counts": dict(c.collective_counts),
+    }
+
+
+def collective_wire_bytes(collective_bytes: Dict[str, float]) -> float:
+    """Per-device wire traffic: ring all-reduce ~2x shard bytes; others ~1x."""
+    factors = {
+        "all-reduce": 2.0,
+        "all-gather": 1.0,
+        "reduce-scatter": 1.0,
+        "all-to-all": 1.0,
+        "collective-permute": 1.0,
+    }
+    return sum(factors.get(k, 1.0) * v for k, v in collective_bytes.items())

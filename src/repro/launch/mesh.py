@@ -1,0 +1,61 @@
+"""Mesh construction for single-pod and multi-pod deployments.
+
+Production target: TPU v5e-256 pods (16 x 16 chips); multi-pod couples 2 pods
+over DCN.  Axes:
+
+  pod    - data parallelism across pods (gradient all-reduce over DCN;
+           optionally int8-compressed, see repro.optim.compression)
+  data   - data parallelism within a pod (batch sharding, ZeRO-1)
+  model  - tensor/expert parallelism (heads, d_ff, vocab, experts, and
+           sequence-sharded KV caches for decode)
+
+These are FUNCTIONS (not module constants) so importing never touches jax
+device state - jax locks the device count on first backend initialization.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The dry-run / deployment mesh: (16, 16) or (2, 16, 16)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh(model_axis: Optional[int] = None):
+    """Best-effort mesh over whatever devices exist (CPU smoke tests, elastic
+    restarts after losing hosts): (data, model) with model_axis dividing the
+    device count."""
+    n = len(jax.devices())
+    if model_axis is None:
+        model_axis = 1
+        for cand in (16, 8, 4, 2):
+            if n % cand == 0 and n >= cand:
+                model_axis = cand
+                break
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes of a mesh (('pod','data') when multi-pod)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def axis_size(mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def dp_size(mesh) -> int:
+    return int(np.prod([axis_size(mesh, a) for a in dp_axes(mesh)]))

@@ -1,0 +1,314 @@
+"""Sharding rules: logical activation axes + parameter partition specs.
+
+Models annotate activations with logical names via :func:`ws`; the launch layer
+activates a rule set (mesh + name -> PartitionSpec) with :func:`axis_rules`.
+Outside any rule context the annotations are no-ops, so models run untouched on
+a single CPU device (smoke tests).
+
+Parameter sharding is path-based (:func:`param_spec`): TP over the ``model``
+axis for heads / d_ff / vocab / experts, replication for small tensors, and an
+optional ZeRO-1 extension over the data axes for optimizer state.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, dp_axes
+
+_ACTIVE: Optional[Tuple[Mesh, Dict[str, P]]] = None
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Optional[Dict[str, P]] = None):
+    global _ACTIVE
+    old = _ACTIVE
+    _ACTIVE = (mesh, rules if rules is not None else activation_rules(mesh))
+    try:
+        yield
+    finally:
+        _ACTIVE = old
+
+
+def ws(x, name: str):
+    """with_sharding_constraint by logical name (no-op outside axis_rules)."""
+    if _ACTIVE is None:
+        return x
+    mesh, rules = _ACTIVE
+    spec = rules.get(name)
+    if spec is None:
+        return x
+    if x.ndim < len([s for s in spec if s is not None]):
+        return x
+    # pad spec to rank
+    entries = list(spec) + [None] * (x.ndim - len(spec))
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*entries[: x.ndim]))
+        )
+    except (ValueError, TypeError):
+        return x
+
+
+def ws_attn(qg, k, v):
+    """Flash-attention operand constraints, MQA/GQA-aware.
+
+    qg: (B, S, Hkv, G, hd); k/v: (B, S, Hkv, hd).  Shard KV heads over
+    ``model`` when they divide; otherwise (MQA, Hkv < model axis) shard the q
+    head-group dim G and replicate the (small) K/V - without this, the
+    unsatisfiable Hkv constraint silently no-ops and every model shard computes
+    ALL q heads (observed as 16x redundant attention FLOPs on granite-20b;
+    EXPERIMENTS.md SSPerf iteration 1)."""
+    if _ACTIVE is None:
+        return qg, k, v
+    mesh, _rules = _ACTIVE
+    mdl = axis_size(mesh, "model")
+    dp = dp_axes(mesh)
+    dpe = dp if len(dp) > 1 else (dp[0] if dp else None)
+    hkv, g = qg.shape[2], qg.shape[3]
+
+    def cons(x, spec):
+        try:
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        except (ValueError, TypeError):
+            return x
+
+    if mdl > 1 and hkv % mdl == 0:
+        qg = cons(qg, P(dpe, None, "model", None, None))
+        k = cons(k, P(dpe, None, "model", None))
+        v = cons(v, P(dpe, None, "model", None))
+    elif mdl > 1 and g % mdl == 0:
+        qg = cons(qg, P(dpe, None, None, "model", None))
+        k = cons(k, P(dpe, None, None, None))
+        v = cons(v, P(dpe, None, None, None))
+    elif mdl > 1 and hkv >= mdl:
+        # non-divisible but hkv >= axis: UNEVEN head sharding (GSPMD pads,
+        # worst shard <=2x work) beats replication (musicgen MHA kv=24 on 16
+        # regressed 4.8 -> 35 s without this; SSPerf).  For hkv < axis the
+        # padding doubles KV compute - leave unconstrained (deepseek case).
+        qg = cons(qg, P(dpe, None, "model", None, None))
+        k = cons(k, P(dpe, None, "model", None))
+        v = cons(v, P(dpe, None, "model", None))
+    return qg, k, v
+
+
+def moe_vmap_axes():
+    """spmd_axis_name for the vmapped MoE group dim: the DP axes (groups
+    follow batch).  None outside a rules context (single-device tests)."""
+    if _ACTIVE is None:
+        return None
+    mesh, _ = _ACTIVE
+    dp = dp_axes(mesh)
+    if not dp:
+        return None
+    return dp if len(dp) > 1 else dp[0]
+
+
+def attn_expand_groups(hkv: int, g: int) -> bool:
+    """True when GQA should expand KV to full q-heads for sharding: Hkv does
+    not divide the model axis but Hq = Hkv*G does.  Trades G-fold KV
+    replication (one all-gather per layer) for fully-local flash loops.
+
+    Worth it only when a backward pass amplifies the per-iteration carry
+    reshards (train); for forward-only prefill the replicated-KV gathers cost
+    more than the small carry all-to-alls (SSPerf deepseek iter 1: expansion
+    made prefill 6x worse; gated off via the rules flag)."""
+    if _ACTIVE is None:
+        return False
+    mesh, rules = _ACTIVE
+    if not rules.get("flash_expand_gqa", False):
+        return False
+    mdl = axis_size(mesh, "model")
+    return mdl > 1 and hkv % mdl != 0 and g % mdl != 0 and (hkv * g) % mdl == 0
+
+
+def attn_carry_pin(shape_hkv: int, shape_g: int):
+    """Returns a pin function for flash-attention scan carries, MQA-aware.
+
+    Handles rank-5 (B, Hkv, G, QB, hd) acc/dq and rank-4 (B, Hkv, G, QB) m/l:
+    shard Hkv over ``model`` when divisible, else shard G (MQA).  Unpinned
+    carries get resharded by GSPMD on every loop iteration (observed as
+    all-to-alls inside the innermost flash loop, 20 TiB/step on granite-20b -
+    EXPERIMENTS.md SSPerf iteration 2)."""
+    if _ACTIVE is None:
+        return lambda x: x
+    mesh, _ = _ACTIVE
+    mdl = axis_size(mesh, "model")
+    dp = dp_axes(mesh)
+    dpe = dp if len(dp) > 1 else (dp[0] if dp else None)
+    if mdl <= 1:
+        return lambda x: x
+    if shape_hkv % mdl == 0:
+        head_entry, g_entry = "model", None
+    elif shape_g % mdl == 0:
+        head_entry, g_entry = None, "model"
+    elif shape_hkv >= mdl:
+        head_entry, g_entry = "model", None  # uneven (see ws_attn fallback)
+    else:
+        # hkv < axis and nothing divides: pinning forces replication or
+        # 2x padding - leave unpinned (SSPerf deepseek iter 2)
+        return lambda x: x
+
+    def pin(x):
+        ent = [dpe, head_entry, g_entry] + [None] * (x.ndim - 3)
+        try:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*ent[: x.ndim]))
+            )
+        except (ValueError, TypeError):
+            return x
+
+    return pin
+
+
+def attn_grad_spec(shape_hkv: int, shape_g: int):
+    """Matching spec names for flash-bwd carriers (see ws_attn)."""
+    if _ACTIVE is None:
+        return None
+    mesh, _ = _ACTIVE
+    mdl = axis_size(mesh, "model")
+    dp = dp_axes(mesh)
+    dpe = dp if len(dp) > 1 else (dp[0] if dp else None)
+    if mdl > 1 and (shape_hkv % mdl == 0 or shape_hkv >= mdl):
+        return mesh, P(dpe, None, "model", None)  # uneven ok (see ws_attn)
+    if mdl > 1:
+        return None  # hkv < axis: leave dk/dv layout to GSPMD
+    return None
+
+
+def activation_rules(mesh: Mesh) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    mdl = "model" if "model" in mesh.axis_names else None
+    return {
+        # (batch, time, d_model)
+        "act_btd": P(dp, None, None),
+        # (batch, time, d_ff) / gated hidden
+        "act_btf": P(dp, None, mdl),
+        # (batch, time, heads, head_dim)
+        "act_bthd": P(dp, None, mdl, None),
+        # logits (batch, time, vocab)
+        "act_btv": P(dp, None, mdl),
+        # decode KV cache (batch, seq, kv_heads, head_dim): sequence-sharded
+        # over the model axis => distributed flash-decode softmax (DESIGN SS5)
+        "kv_bshd": P(dp, mdl, None, None),
+        # flash-attention internals (full-seq, heads on model)
+        "attn_kv": P(dp, None, mdl, None),  # (B, S, Hkv, hd)
+        "attn_q": P(dp, None, mdl, None, None),  # (B, S, Hkv, G, hd)
+        "attn_acc": P(dp, mdl, None, None, None),  # (B, Hkv, G, QB, hd)
+        # ssm state (batch, heads, head_dim, state)
+        "ssm_state": P(dp, mdl, None, None),
+        # rglru hidden (batch, width)
+        "act_bw": P(dp, mdl),
+        # MoE buffers
+        "moe_gec": P(dp, None, mdl),  # dispatch/combine (groups, g, E, c)->pad
+        "moe_ecd": P(None, mdl, None, None),  # (groups, E, c, d) expert-major
+        "moe_ecf": P(mdl, None, None),  # (E, c, d) expert-major buffers
+        # grouped tokens (n_groups, g, d): groups follow batch (dp), tokens
+        # within a group follow the SP seq sharding - matches the (B, S, d)
+        # residual layout exactly when group_size == seq_len.  Routing is
+        # vmapped over groups (lax.map would dynamic-slice the sharded groups
+        # dim and all-gather everything - SSPerf dbrx iters 1-4)
+        "moe_gxd": P(dp, mdl, None),
+        # flat per-slot tensors (g*k, d)/(g*k, E): seq-sharded rows so the
+        # dispatch scatter lowers to the token->expert all-to-all
+        "moe_td": P(mdl, None),
+        "moe_ge": P(mdl, None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# parameter specs by path
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES = [
+    # (regex on joined path, spec WITHOUT the stacked-layer leading axis)
+    # NOTE: first match wins - expert rules MUST precede the generic matmul
+    # rules (a mis-ordering here sharded expert weights on d_model instead of
+    # the expert dim; caught by tests/test_sharding_rules.py)
+    (r"experts/.*(wi|wg)$", P("model", None, None)),  # (E, d, f)
+    (r"experts/.*wo$", P("model", None, None)),  # (E, f, d)
+    (r"router", P(None, "model")),  # (d, E)
+    (r"embed", P("model", None)),  # (vocab, d)
+    (r"pos_table", P(None, "model")),  # (max_seq, d)
+    (r"lm_head", P(None, "model")),  # (d, vocab)
+    (r"(wq|wk|wv)$", P(None, "model")),  # (d, heads*hd)
+    (r"wo$", P("model", None)),  # (heads*hd, d) / (f, d)
+    (r"(wi|wg)$", P(None, "model")),  # (d, f)
+    (r"in_proj$", P(None, "model")),  # ssm (d, inner+...)
+    (r"out_proj$", P("model", None)),  # ssm (inner, d)
+    (r"(conv_w|conv_b|A_log|dt_bias|D)$", P("model")),  # ssm per-channel
+    (r"(rg_x|rg_gate)$", P(None, "model")),  # rglru (d, w)
+    (r"rg_out$", P("model", None)),  # (w, d)
+    (r"(rg_a|rg_input_gate_w|rg_rec_gate_w)$", P("model")),
+    (r"(scale|bias)$", P(None)),  # norms
+]
+
+
+def param_spec(path: str, ndim: int, stacked: bool) -> P:
+    """PartitionSpec for a parameter at `path` (slash-joined), with `stacked`
+    True when the leading axis is the scan-over-layers axis."""
+    base = None
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path):
+            base = spec
+            break
+    if base is None:
+        base = P()
+    entries = list(base)
+    if stacked:
+        entries = [None] + entries
+    # pad/trim to rank
+    entries = (entries + [None] * ndim)[:ndim]
+    return P(*entries)
+
+
+def tree_param_specs(params, stacked_prefixes: Tuple[str, ...] = ("blocks",)):
+    """Map a param pytree to PartitionSpecs by path."""
+
+    def visit(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        stacked = any(pstr.startswith(p) for p in stacked_prefixes)
+        return param_spec(pstr, jnp.ndim(leaf), stacked)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def tree_shardings(mesh: Mesh, specs):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def validate_divisibility(params, specs, mesh) -> list:
+    """Returns a list of (path, shape, spec) where a sharded dim does not divide
+    evenly - these fall back to replication (GSPMD would pad; we prefer
+    explicitness)."""
+    issues = []
+
+    def visit(path, leaf, spec):
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            size = int(np.prod([axis_size(mesh, n) for n in names]))
+            if leaf.shape[dim] % size != 0:
+                issues.append((jax.tree_util.keystr(path), leaf.shape, spec))
+                return
+
+    jax.tree_util.tree_map_with_path(visit, params, specs)
+    return issues
+
+
+def fallback_replicate(specs, issues_paths):
+    """Replace specs at problematic paths with full replication."""
+
+    def visit(path, spec):
+        if jax.tree_util.keystr(path) in issues_paths:
+            return P()
+        return spec
+
+    return jax.tree_util.tree_map_with_path(visit, specs)

@@ -1,0 +1,368 @@
+"""Step builders: jit'd train / prefill / decode steps with full sharding specs.
+
+Parallelism layout (DESIGN.md SS5):
+  * TP over ``model``: heads, d_ff, vocab, experts (param specs in
+    launch/sharding.py).
+  * DP over ``pod`` x ``data``: batch; FSDP - large params additionally shard
+    their largest free dim over the DP axes (GSPMD inserts the use-site
+    all-gathers), which is what fits dbrx-132b's optimizer state in HBM.
+  * SP: activations between blocks are sequence-sharded over ``model``
+    (Megatron-SP style; logical axis "act_btd"), which also bounds the
+    scan-over-layers backward carry memory.
+  * Decode KV caches are sequence-sharded over ``model`` (flash-decode).
+
+Batch dims that do not divide the DP axes (long_500k's batch=1) fall back to
+replication automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.launch import sharding as shd
+from repro.launch.mesh import axis_size, dp_axes, dp_size
+from repro.models import model as model_lib
+from repro.optim import adamw
+
+FSDP_MIN_SIZE = 1 << 20  # only FSDP-shard params with >= 1M elements
+
+
+# ---------------------------------------------------------------------------
+# spec construction
+# ---------------------------------------------------------------------------
+
+
+def _divides(shape_dim: int, mesh: Mesh, names) -> bool:
+    names = names if isinstance(names, tuple) else (names,)
+    size = int(np.prod([axis_size(mesh, n) for n in names]))
+    return size > 1 and shape_dim % size == 0
+
+
+def _fix_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims that don't divide; try moving 'model' to another
+    free dim first (e.g. odd vocab sizes shard d_model instead)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, e in enumerate(entries):
+        if e is None:
+            continue
+        names = e if isinstance(e, tuple) else (e,)
+        size = int(np.prod([axis_size(mesh, n) for n in names]))
+        if shape[i] % size != 0:
+            entries[i] = None
+            # try to relocate to another dim
+            for j in range(len(shape)):
+                if entries[j] is None and shape[j] % size == 0 and j != i:
+                    entries[j] = e
+                    break
+    return P(*entries)
+
+
+def _add_fsdp(spec: P, shape, mesh: Mesh) -> P:
+    """Shard the largest unsharded dim over the DP axes (FSDP / ZeRO-3)."""
+    if int(np.prod(shape)) < FSDP_MIN_SIZE:
+        return spec
+    dp = dp_axes(mesh)
+    if not dp:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    dims = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in dims:
+        if entries[i] is None and _divides(shape[i], mesh, dp):
+            entries[i] = dp if len(dp) > 1 else dp[0]
+            return P(*entries)
+    return spec
+
+
+def param_shardings(params_shapes, mesh: Mesh, fsdp: bool = True):
+    """NamedShardings for a param pytree (shapes or arrays)."""
+
+    def visit(path, leaf):
+        pstr = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        stacked = pstr.startswith("blocks")
+        spec = shd.param_spec(pstr, len(leaf.shape), stacked)
+        spec = _fix_spec(spec, leaf.shape, mesh)
+        if fsdp:
+            spec = _add_fsdp(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(visit, params_shapes)
+
+
+def batch_shardings(specs: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh):
+    dp = dp_axes(mesh)
+    dsize = dp_size(mesh)
+
+    def one(s):
+        if s.shape and dsize > 1 and s.shape[0] % dsize == 0:
+            return NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0]))
+        return NamedSharding(mesh, P())
+
+    return {k: one(v) for k, v in specs.items()}
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, batch: int):
+    """Decode-cache shardings: KV seq-sharded over model; states head-sharded."""
+    dp = dp_axes(mesh)
+    dsize = dp_size(mesh)
+    dpe = dp if len(dp) > 1 else (dp[0] if dp else None)
+    shard_b = dsize > 1 and batch % dsize == 0
+    bspec = dpe if shard_b else None
+
+    def visit(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        nd = len(leaf.shape)
+        stacked = "'blocks'" in pstr
+        off = 1 if stacked else 0
+        ent = [None] * nd
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        if "'k'" in pstr or "'v'" in pstr:
+            # (n, B, S, Hkv, hd)
+            ent[off + 0] = bspec
+            if _divides(leaf.shape[off + 1], mesh, "model"):
+                ent[off + 1] = "model"
+        elif "'state'" in pstr:
+            # (n, B, H, N, P)
+            ent[off + 0] = bspec
+            if _divides(leaf.shape[off + 1], mesh, "model"):
+                ent[off + 1] = "model"
+        elif "'conv'" in pstr:
+            # (n, B, W, C)
+            ent[off + 0] = bspec
+            if _divides(leaf.shape[-1], mesh, "model"):
+                ent[-1] = "model"
+        elif "'h'" in pstr:
+            # (n, B, W)
+            ent[off + 0] = bspec
+            if _divides(leaf.shape[-1], mesh, "model"):
+                ent[-1] = "model"
+        return NamedSharding(mesh, P(*ent))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepBundle:
+    step_fn: Callable  # jit'd (state, batch) -> (state, metrics)
+    state_shapes: Any
+    state_shardings: Any
+    batch_shardings: Any
+    init_state: Callable  # (key) -> state (sharded)
+
+
+def make_train_state_shapes(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig):
+    p_shapes = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    )
+    o_shapes = jax.eval_shape(lambda: adamw.init(_zeros_like_tree(p_shapes)))
+    return {"params": p_shapes, "opt": o_shapes,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _zeros_like_tree(shapes):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), shapes
+    )
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    input_sds: Dict[str, jax.ShapeDtypeStruct],
+    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+    total_steps: int = 10_000,
+    fsdp: bool = True,
+) -> TrainStepBundle:
+    sched = adamw.warmup_cosine(opt_cfg.lr, min(100, total_steps // 10 + 1),
+                                total_steps)
+    state_shapes = make_train_state_shapes(cfg, opt_cfg)
+    p_shard = param_shardings(state_shapes["params"], mesh, fsdp)
+    state_shardings = {
+        "params": p_shard,
+        "opt": adamw.OptState(
+            m=jax.tree_util.tree_map(lambda s: s, p_shard),
+            v=jax.tree_util.tree_map(lambda s: s, p_shard),
+            count=NamedSharding(mesh, P()),
+        ),
+        "step": NamedSharding(mesh, P()),
+    }
+    b_shard = batch_shardings(input_sds, mesh)
+    repl = NamedSharding(mesh, P())
+
+    rules = train_rules(mesh)
+
+    def step_fn(state, batch):
+        # rules must bind during *tracing* (which happens at .lower(), after
+        # the builder returns), so the context lives inside the traced body
+        with shd.axis_rules(mesh, rules):
+            return _step_impl(state, batch)
+
+    def _step_impl(state, batch):
+        def loss_of(p):
+            return model_lib.loss_fn(p, cfg, batch)
+
+        (loss, aux_metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True
+        )(state["params"])
+        lr = sched(state["step"])
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads, state["opt"], state["params"], opt_cfg, lr
+        )
+        metrics = {"loss": loss, "lr": lr, **aux_metrics, **opt_metrics}
+        metrics = {k: v.astype(jnp.float32) for k, v in metrics.items()}
+        return (
+            {"params": new_params, "opt": new_opt, "step": state["step"] + 1},
+            metrics,
+        )
+
+    with mesh:
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(state_shardings, b_shard),
+            out_shardings=(state_shardings, repl),
+            donate_argnums=(0,),
+        )
+
+    def init_state(key):
+        with mesh:
+            return jax.jit(
+                lambda k: {
+                    "params": model_lib.init_params(k, cfg),
+                    "opt": adamw.init(
+                        _zeros_like_tree(state_shapes["params"])
+                    ),
+                    "step": jnp.zeros((), jnp.int32),
+                },
+                out_shardings=state_shardings,
+            )(key)
+
+    return TrainStepBundle(
+        step_fn=jitted,
+        state_shapes=state_shapes,
+        state_shardings=state_shardings,
+        batch_shardings=b_shard,
+        init_state=init_state,
+    )
+
+
+# ---------------------------------------------------------------------------
+# serve: prefill & decode
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStepBundle:
+    step_fn: Callable
+    param_shardings: Any
+    in_shardings: Any
+    out_shardings: Any
+
+
+def build_prefill_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    shape: ShapeSpec,
+    input_sds: Dict[str, jax.ShapeDtypeStruct],
+    fsdp: bool = True,
+) -> ServeStepBundle:
+    p_shapes = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    )
+    p_shard = param_shardings(p_shapes, mesh, fsdp)
+    b_shard = batch_shardings(input_sds, mesh)
+    cache_shapes = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    c_shard = cache_shardings(cache_shapes, mesh, shape.global_batch)
+    repl = NamedSharding(mesh, P())
+
+    rules = train_rules(mesh, backward=False)
+
+    def prefill_fn(params, batch):
+        with shd.axis_rules(mesh, rules):
+            logits, cache = model_lib.prefill(
+                params, cfg, batch["tokens"], cache_len=shape.seq_len,
+                prefix_embeds=batch.get("prefix_embeds"),
+            )
+        return logits, cache
+
+    with mesh:
+        jitted = jax.jit(
+            prefill_fn,
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(repl, c_shard),
+        )
+    return ServeStepBundle(jitted, p_shard, (p_shard, b_shard), (repl, c_shard))
+
+
+def build_decode_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    shape: ShapeSpec,
+    input_sds: Dict[str, jax.ShapeDtypeStruct],
+    fsdp: bool = True,
+) -> ServeStepBundle:
+    p_shapes = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    )
+    p_shard = param_shardings(p_shapes, mesh, fsdp)
+    b_shard = batch_shardings(input_sds, mesh)
+    cache_shapes = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    c_shard = cache_shardings(cache_shapes, mesh, shape.global_batch)
+    repl = NamedSharding(mesh, P())
+
+    rules = _serve_rules(mesh)
+
+    def decode_fn(params, batch, cache):
+        with shd.axis_rules(mesh, rules):
+            return model_lib.decode_step(params, cfg, batch["token"], cache)
+
+    with mesh:
+        jitted = jax.jit(
+            decode_fn,
+            in_shardings=(p_shard, b_shard, c_shard),
+            out_shardings=(repl, c_shard),
+            donate_argnums=(2,),
+        )
+    return ServeStepBundle(
+        jitted, p_shard, (p_shard, b_shard, c_shard), (repl, c_shard)
+    )
+
+
+def _serve_rules(mesh: Mesh):
+    """Decode has seq-len 1: activations can't sequence-shard; override
+    act_btd to batch-only."""
+    rules = shd.activation_rules(mesh)
+    dp = dp_axes(mesh)
+    rules["act_btd"] = P(dp if len(dp) > 1 else (dp[0] if dp else None), None, None)
+    return rules
+
+
+def train_rules(mesh: Mesh, backward: bool = True):
+    """Sequence parallelism between blocks for train/prefill.  ``backward``
+    enables the GQA->MHA flash expansion (pays off only when the backward
+    pass amplifies carry reshards - see sharding.attn_expand_groups)."""
+    rules = shd.activation_rules(mesh)
+    dp = dp_axes(mesh)
+    dpe = dp if len(dp) > 1 else (dp[0] if dp else None)
+    mdl = "model" if "model" in mesh.axis_names else None
+    rules["act_btd"] = P(dpe, mdl, None)
+    rules["flash_expand_gqa"] = backward
+    return rules

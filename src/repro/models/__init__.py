@@ -1,0 +1,10 @@
+"""Model zoo: composable decoder blocks covering all 10 assigned architectures."""
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_count,
+    prefill,
+)

@@ -1,0 +1,137 @@
+"""Shared model-building blocks: norms, embeddings, positions, MLPs.
+
+All layers are functional: ``init_*`` returns a param pytree, ``apply``-style
+functions are pure.  Every matmul routes through repro.core.imc_linear so the
+paper's IMC execution modes apply architecture-wide.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.imc_linear import IMCConfig, DIGITAL, linear
+from repro.launch.sharding import ws
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(kind: str, d: int, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+    if kind == "layernorm":
+        return {"scale": jnp.zeros((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        y = y * (1.0 + params["scale"].astype(jnp.float32))
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * (1.0 + params["scale"].astype(jnp.float32)) + params["bias"].astype(
+            jnp.float32
+        )
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# positions
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(positions, d: int):
+    """(..., S) -> (..., S, d) classic sin/cos table, computed on the fly."""
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# softcap
+# ---------------------------------------------------------------------------
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs (gated + plain), optionally through the IMC layer
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "wi": dense_init(ks[0], d, d_ff, dtype),
+            "wg": dense_init(ks[1], d, d_ff, dtype),
+            "wo": dense_init(ks[2], d_ff, d, dtype),
+        }
+    if kind == "gelu":
+        return {
+            "wi": dense_init(ks[0], d, d_ff, dtype),
+            "wo": dense_init(ks[2], d_ff, d, dtype),
+        }
+    raise ValueError(kind)
+
+
+def apply_mlp(params, x, kind: str, imc: IMCConfig = DIGITAL, rng=None):
+    if kind in ("swiglu", "geglu"):
+        h = linear(params["wi"], x, imc, rng)
+        g = linear(params["wg"], x, imc, rng)
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        h = act(g.astype(jnp.float32)).astype(h.dtype) * h
+        h = ws(h, "act_btf")
+        return linear(params["wo"], h, imc, rng)
+    h = linear(params["wi"], x, imc, rng)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    h = ws(h, "act_btf")
+    return linear(params["wo"], h, imc, rng)

@@ -1,0 +1,142 @@
+"""Mixture-of-Experts with top-k routing, grouped capacity-based dispatch and
+expert parallelism over the ``model`` mesh axis.
+
+Dispatch uses the scatter/gather formulation (O(T*k*d) memory) rather than the
+GShard one-hot einsum (O(T*E*C)): tokens are routed in groups of
+``moe_group_size``; within a group each (token, choice) slot gets a position in
+its expert's capacity buffer via a cumulative count, over-capacity slots drop
+(controlled by capacity_factor), the (E, C, d) buffer is built by scatter,
+experts run as a vmapped MLP over the expert axis (sharded on ``model``), and
+results gather back to token order weighted by the router gates.
+
+Returns an auxiliary load-balancing loss (Switch-style) for the train step.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.imc_linear import DIGITAL, IMCConfig, linear
+from repro.launch.sharding import moe_vmap_axes, ws
+from repro.models.layers import dense_init
+
+
+def init_moe(key, d: int, d_ff: int, n_experts: int, mlp_kind: str, dtype):
+    ks = jax.random.split(key, 4)
+
+    def stack(k, d_in, d_out):
+        kk = jax.random.split(k, n_experts)
+        return jnp.stack([dense_init(ki, d_in, d_out, dtype) for ki in kk])
+
+    params = {
+        "router": dense_init(ks[0], d, n_experts, jnp.float32, scale=0.02),
+        "experts": {
+            "wi": stack(ks[1], d, d_ff),
+            "wo": stack(ks[3], d_ff, d),
+        },
+    }
+    if mlp_kind in ("swiglu", "geglu"):
+        params["experts"]["wg"] = stack(ks[2], d, d_ff)
+    return params
+
+
+def _expert_mlp(ep, h, mlp_kind: str, imc: IMCConfig, rng):
+    """h: (C, d) for a single expert's param slice ep."""
+    hi = linear(ep["wi"], h, imc, rng)
+    if mlp_kind in ("swiglu", "geglu"):
+        g = linear(ep["wg"], h, imc, rng)
+        act = jax.nn.silu if mlp_kind == "swiglu" else jax.nn.gelu
+        hi = act(g.astype(jnp.float32)).astype(hi.dtype) * hi
+    else:
+        hi = jax.nn.gelu(hi.astype(jnp.float32)).astype(hi.dtype)
+    return linear(ep["wo"], hi, imc, rng)
+
+
+def apply_moe(
+    params,
+    x,  # (B, S, d)
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float,
+    group_size: int,
+    mlp_kind: str,
+    imc: IMCConfig = DIGITAL,
+    rng=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    g_sz = min(group_size, t)
+    n_groups = -(-t // g_sz)
+    pad = n_groups * g_sz - t
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    xg = ws(xt.reshape(n_groups, g_sz, d), "moe_gxd")
+
+    cap = int(-(-top_k * g_sz * capacity_factor // n_experts))
+    cap = max(cap, 1)
+
+    def route_group(xg_i):
+        # (g, d) -> (g, d), aux
+        logits = jnp.einsum(
+            "gd,de->ge", xg_i.astype(jnp.float32), params["router"]
+        )
+        probs = jax.nn.softmax(logits, axis=-1)  # (g, E)
+        gate, idx = jax.lax.top_k(probs, top_k)  # (g, k)
+        gate = gate / (jnp.sum(gate, axis=-1, keepdims=True) + 1e-9)
+
+        # position in expert: flatten slots row-major (token-priority order)
+        flat_e = idx.reshape(-1)  # (g*k,)
+        onehot = ws(jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32),
+                    "moe_ge")
+        pos = jnp.cumsum(onehot, axis=0) - 1  # (g*k, E)
+        pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+        keep = pos_in_e < cap
+        slot = jnp.where(keep, flat_e * cap + pos_in_e, n_experts * cap)
+
+        # scatter tokens into capacity buffers (+1 overflow row, dropped);
+        # rows seq-sharded, buffer expert-sharded => lowers to the canonical
+        # sequence->expert all-to-all
+        x_rep = ws(jnp.repeat(xg_i, top_k, axis=0), "moe_td")  # (g*k, d)
+        buf = jnp.zeros((n_experts * cap + 1, d), xg_i.dtype)
+        buf = buf.at[slot].set(x_rep, mode="drop")
+        buf = buf[:-1].reshape(n_experts, cap, d)
+        buf = ws(buf, "moe_ecf")
+
+        # expert computation, vmapped over the (model-sharded) expert axis
+        h = jax.vmap(
+            lambda ep, hb: _expert_mlp(ep, hb, mlp_kind, imc, rng)
+        )(params["experts"], buf)  # (E, cap, d)
+        h = ws(h, "moe_ecf")
+
+        # gather back to slots, weight by gates, sum over k choices
+        h_flat = jnp.concatenate(
+            [h.reshape(n_experts * cap, d), jnp.zeros((1, d), h.dtype)], axis=0
+        )
+        y_slots = ws(h_flat[slot], "moe_td")  # (g*k, d) expert->seq a2a back
+        y_slots = y_slots * (gate.reshape(-1)[:, None] * keep[:, None]).astype(
+            y_slots.dtype
+        )
+        y = jnp.sum(y_slots.reshape(g_sz, top_k, d), axis=1)
+
+        # Switch-style load-balance aux: E * sum_e f_e * p_e
+        frac = jnp.mean(
+            jax.nn.one_hot(idx, n_experts, dtype=jnp.float32), axis=(0, 1)
+        )
+        pmean = jnp.mean(probs, axis=0)
+        aux = n_experts * jnp.sum(frac * pmean)
+        return y, aux
+
+    # vmap (NOT lax.map): batched routing keeps the groups dim sharded with
+    # the batch and fuses per-group collectives into one wide all-to-all;
+    # spmd_axis_name pins every internal buffer's group dim to the DP axes;
+    # checkpoint: dispatch buffers are recomputed in backward, not saved
+    y, aux = jax.vmap(
+        jax.checkpoint(route_group, prevent_cse=False),
+        spmd_axis_name=moe_vmap_axes(),
+    )(xg)
+    y = y.reshape(n_groups * g_sz, d)[:t].reshape(b, s, d)
+    return y, jnp.mean(aux)

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block structure (Griffin "recurrent block"):
+  x-branch: linear -> temporal conv1d -> RG-LRU
+  y-branch: linear -> GeLU
+  out = (x-branch * y-branch) -> linear
+
+RG-LRU core (per channel):
+  r_t = sigmoid(lam_a * x_t + b_a)          (recurrence gate; diagonal weights -
+  i_t = sigmoid(lam_i * x_t + b_i)           see DESIGN.md SS7: Griffin uses
+  a_t = exp(-c * softplus(A) * r_t)          block-diagonal; we use diagonal)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The linear recurrence runs as a jax.lax.associative_scan (log-depth, TPU
+friendly) for train/prefill and as a single step for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.imc_linear import DIGITAL, IMCConfig, linear
+from repro.launch.sharding import ws
+from repro.models.layers import dense_init
+
+RG_C = 8.0  # Griffin's fixed temperature
+
+
+def init_rglru(key, d_model: int, width: int, conv_width: int, dtype):
+    ks = jax.random.split(key, 7)
+    return {
+        "rg_x": dense_init(ks[0], d_model, width, dtype),
+        "rg_gate": dense_init(ks[1], d_model, width, dtype),
+        "rg_out": dense_init(ks[2], width, d_model, dtype),
+        "conv_w": (jax.random.normal(ks[3], (conv_width, width)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        # RG-LRU per-channel parameters
+        "rg_a": jnp.log(jnp.expm1(  # softplus^-1 of A with a^c in [0.9, 0.999]
+            -jnp.log(
+                jax.random.uniform(ks[4], (width,), minval=0.9, maxval=0.999)
+            ) / RG_C
+        )),
+        "rg_input_gate_w": (jax.random.normal(ks[5], (width,)) * 0.1),
+        "rg_rec_gate_w": (jax.random.normal(ks[6], (width,)) * 0.1),
+        "rg_input_gate_b": jnp.zeros((width,)),
+        "rg_rec_gate_b": jnp.zeros((width,)),
+    }
+
+
+def _causal_conv(x, w, b):
+    width = w.shape[0]
+    out = jnp.zeros_like(x)
+    for u in range(width):
+        shift = width - 1 - u
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xs * w[u]
+    return out + b
+
+
+def _gates(params, xb):
+    xf = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf * params["rg_rec_gate_w"] + params["rg_rec_gate_b"])
+    i = jax.nn.sigmoid(xf * params["rg_input_gate_w"] + params["rg_input_gate_b"])
+    log_a = -RG_C * jax.nn.softplus(params["rg_a"]) * r  # (..., W), <= 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, gated_x
+
+
+def rglru_forward(params, x, cfg, imc: IMCConfig = DIGITAL, rng=None, h0=None):
+    """Full-sequence RG block. x: (B, S, d_model). Returns (y, h_last)."""
+    xb = linear(params["rg_x"], x, imc, rng)  # (B, S, W)
+    gate = jax.nn.gelu(
+        linear(params["rg_gate"], x, imc, rng).astype(jnp.float32)
+    )
+    xb = _causal_conv(xb, params["conv_w"], params["conv_b"])
+    xb = ws(xb, "act_btf")
+    a, gx = _gates(params, xb)  # (B, S, W) f32
+
+    if h0 is not None:
+        # fold the initial state in as a virtual step at t=0
+        gx = gx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+        # (exact: h_1 = a_1 h_0 + gx_1)
+        a = a.at[:, 0].set(jnp.zeros_like(a[:, 0]))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    y = (h * gate).astype(x.dtype)
+    y = ws(y, "act_btf")
+    out = linear(params["rg_out"], y, imc, rng)
+    return out, h[:, -1].astype(jnp.float32)
+
+
+def init_rglru_cache(batch: int, width: int, conv_width: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, width), dtype),
+        "h": jnp.zeros((batch, width), jnp.float32),
+    }
+
+
+def rglru_decode(params, x, cache, cfg, imc: IMCConfig = DIGITAL, rng=None):
+    """One-token step. x: (B, 1, d_model). Returns (y, new_cache)."""
+    xb = linear(params["rg_x"], x, imc, rng)  # (B, 1, W)
+    gate = jax.nn.gelu(
+        linear(params["rg_gate"], x, imc, rng).astype(jnp.float32)
+    )
+    hist = jnp.concatenate([cache["conv"], xb], axis=1)  # (B, W_conv, W)
+    conv_out = (
+        jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32))
+        + params["conv_b"].astype(jnp.float32)
+    )[:, None, :]
+    a, gx = _gates(params, conv_out)  # (B, 1, W)
+    h = a[:, 0] * cache["h"] + gx[:, 0]  # (B, W)
+    y = (h[:, None, :] * gate).astype(x.dtype)
+    out = linear(params["rg_out"], y, imc, rng)
+    return out, {"conv": hist[:, 1:].astype(cache["conv"].dtype), "h": h}

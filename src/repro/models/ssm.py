@@ -1,0 +1,217 @@
+"""Mamba-2 (SSD: state-space duality) mixer - chunked matmul-friendly form.
+
+The SSD algorithm maps the selective state-space recurrence
+
+    h[t] = exp(dt[t] A) h[t-1] + dt[t] B[t] (x) x[t];   y[t] = C[t] . h[t] + D x[t]
+
+onto chunk-local matmuls (MXU-friendly: the intra-chunk term is an L x L
+masked-decay attention-like matmul) plus a sequential inter-chunk state scan -
+this is the TPU-native adaptation of the CUDA scan kernels (DESIGN.md SS3).
+
+Decode is O(1): a single state update per token, so long_500k decode carries a
+constant-size cache (no KV growth) - the reason mamba2 runs the 500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.imc_linear import DIGITAL, IMCConfig, linear
+from repro.launch.sharding import ws
+from repro.models.layers import dense_init
+
+
+def ssm_dims(d_model: int, expand: int, head_dim: int, groups: int, state: int):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_ch = d_inner + 2 * groups * state
+    return d_inner, n_heads, conv_ch
+
+
+def init_ssm(key, d_model, expand, head_dim, groups, state, conv_width, dtype):
+    d_inner, n_heads, conv_ch = ssm_dims(d_model, expand, head_dim, groups, state)
+    ks = jax.random.split(key, 6)
+    d_proj = 2 * d_inner + 2 * groups * state + n_heads
+    # dt_bias: inverse-softplus of dt ~ U[1e-3, 1e-1]
+    dt = jnp.exp(
+        jax.random.uniform(ks[2], (n_heads,))
+        * (math.log(0.1) - math.log(1e-3))
+        + math.log(1e-3)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": dense_init(ks[0], d_model, d_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_width, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[3], (n_heads,), minval=1.0, maxval=16.0)
+        ),
+        "D": jnp.ones((n_heads,)),
+        "dt_bias": dt_bias,
+        "norm_scale": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[4], d_inner, d_model, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, C), w: (W, C)."""
+    width = w.shape[0]
+    out = jnp.zeros_like(x)
+    for u in range(width):
+        shift = width - 1 - u
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xs * w[u]
+    return out + b
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    """Mamba-2 RMSNormGated: rmsnorm(y * silu(z))."""
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(
+        y.dtype
+    )
+
+
+def _split_proj(params, x, cfg, imc, rng):
+    d_inner, n_heads, _ = ssm_dims(
+        cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    )
+    gn = cfg.ssm_groups * cfg.ssm_state
+    proj = linear(params["in_proj"], x, imc, rng)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : 2 * d_inner + 2 * gn]
+    dt_raw = proj[..., 2 * d_inner + 2 * gn :]
+    return z, xbc, dt_raw, d_inner, n_heads
+
+
+def ssm_forward(params, x, cfg, imc: IMCConfig = DIGITAL, rng=None):
+    """Full-sequence SSD. x: (B, S, d_model)."""
+    b, s, _ = x.shape
+    hd, g, n = cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    z, xbc, dt_raw, d_inner, n_heads = _split_proj(params, x, cfg, imc, rng)
+    xbc = jax.nn.silu(
+        _causal_conv(xbc, params["conv_w"], params["conv_b"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    xs = xbc[..., :d_inner].reshape(b, s, n_heads, hd)
+    bmat = xbc[..., d_inner : d_inner + g * n].reshape(b, s, g, n)
+    cmat = xbc[..., d_inner + g * n :].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"])  # (H,)
+
+    l = min(cfg.ssm_chunk, s)
+    nc = -(-s // l)
+    pad = nc * l - s
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    heads_per_g = n_heads // g
+    xs_c = xs.reshape(b, nc, l, n_heads, hd)
+    b_c = bmat.reshape(b, nc, l, g, n)
+    c_c = cmat.reshape(b, nc, l, g, n)
+    dt_c = dt.reshape(b, nc, l, n_heads)
+    causal = jnp.tril(jnp.ones((l, l), bool))
+
+    def chunk_body(state, inp):
+        """One chunk: intra-chunk L x L decay-masked matmul + inter-chunk
+        state propagation.  All L x L intermediates live only inside this
+        (checkpointed) body -> O(chunk) transient memory, flash-style."""
+        x_ch, b_ch, c_ch, dt_ch = inp  # (B,L,H,P), (B,L,G,N), (B,L,G,N), (B,L,H)
+        da = dt_ch * a  # (B,L,H)
+        cum = jnp.cumsum(da, axis=1)
+        xdt = x_ch.astype(jnp.float32) * dt_ch[..., None]  # (B,L,H,P)
+        # intra: y[l1] += (C[l1].B[l2]) exp(cum[l1]-cum[l2]) dt[l2] x[l2]
+        cb = jnp.einsum("blgn,bsgn->bgls", c_ch.astype(jnp.float32),
+                        b_ch.astype(jnp.float32))  # (B,G,L,L)
+        cb = jnp.repeat(cb, heads_per_g, axis=1)  # (B,H,L,L)
+        decay = jnp.exp(
+            cum.transpose(0, 2, 1)[..., :, None]
+            - cum.transpose(0, 2, 1)[..., None, :]
+        )  # (B,H,L,L)
+        m = jnp.where(causal, cb * decay, 0.0)
+        y = jnp.einsum("bhls,bshp->blhp", m, xdt)
+        # inter: y[l] += C[l] . (exp(cum[l]) * state_in)
+        ch = jnp.repeat(c_ch, heads_per_g, axis=2).astype(jnp.float32)
+        y = y + jnp.einsum("blhn,bhnp->blhp", ch, state) * jnp.exp(cum)[..., None]
+        # state update: S' = exp(cum[-1]) S + sum_l exp(cum[-1]-cum[l]) dt B (x) x
+        tail = jnp.exp(cum[:, -1:, :] - cum)  # (B,L,H)
+        bh = jnp.repeat(b_ch, heads_per_g, axis=2).astype(jnp.float32)
+        s_c = jnp.einsum("blhn,blhp->bhnp", bh, xdt * tail[..., None])
+        new_state = jnp.exp(cum[:, -1, :])[..., None, None] * state + s_c
+        return new_state, y
+
+    state0 = jnp.zeros((b, n_heads, n, hd), jnp.float32)
+    xs_scan = (
+        jnp.moveaxis(xs_c, 1, 0),
+        jnp.moveaxis(b_c, 1, 0),
+        jnp.moveaxis(c_c, 1, 0),
+        jnp.moveaxis(dt_c, 1, 0),
+    )
+    final_state, y = jax.lax.scan(
+        jax.checkpoint(chunk_body, prevent_cse=False), state0, xs_scan
+    )
+    y = jnp.moveaxis(y, 0, 1).reshape(b, nc * l, n_heads, hd)[:, :s]
+    y = y + params["D"][None, None, :, None] * xs[:, :s].astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = _gated_norm(y, z, params["norm_scale"])
+    y = ws(y, "act_btf")
+    return linear(params["out_proj"], y, imc, rng), final_state
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(batch, cfg, dtype):
+    d_inner, n_heads, conv_ch = ssm_dims(
+        cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    )
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros(
+            (batch, n_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32
+        ),
+    }
+
+
+def ssm_decode(params, x, cache, cfg, imc: IMCConfig = DIGITAL, rng=None):
+    """One-token step. x: (B, 1, d_model). Returns (y, new_cache)."""
+    b = x.shape[0]
+    hd, g, n = cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    z, xbc, dt_raw, d_inner, n_heads = _split_proj(params, x, cfg, imc, rng)
+    # conv with cached context
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, W, C)
+    conv_out = (
+        jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32))
+        + params["conv_b"].astype(jnp.float32)
+    )[:, None, :]
+    xbc_a = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = hist[:, 1:]
+
+    xs = xbc_a[..., :d_inner].reshape(b, n_heads, hd)
+    bmat = xbc_a[..., d_inner : d_inner + g * n].reshape(b, g, n)
+    cmat = xbc_a[..., d_inner + g * n :].reshape(b, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)[:, 0] + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    heads_per_g = n_heads // g
+
+    decay = jnp.exp(dt * a)  # (B,H)
+    bh = jnp.repeat(bmat, heads_per_g, axis=1).astype(jnp.float32)  # (B,H,N)
+    ch = jnp.repeat(cmat, heads_per_g, axis=1).astype(jnp.float32)
+    dbx = dt[..., None, None] * bh[..., :, None] * xs.astype(jnp.float32)[..., None, :]
+    state = cache["state"] * decay[..., None, None] + dbx  # (B,H,N,P)
+    y = jnp.einsum("bhn,bhnp->bhp", ch, state)
+    y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = _gated_norm(y, z, params["norm_scale"])
+    out = linear(params["out_proj"], y, imc, rng)
+    return out, {"conv": new_conv, "state": state}

@@ -1,0 +1,231 @@
+"""Block assembly: pattern-cycled decoder layers with scan-over-layers.
+
+Layers are grouped by the config's block ``pattern`` (e.g. gemma2 =
+("local","attn"), recurrentgemma = ("rglru","rglru","local"), mamba2 =
+("ssm",)).  Parameters for each pattern position are stacked across the
+``n_full_cycles`` repetitions and applied under jax.lax.scan (small HLO,
+fast multi-pod compiles); the remainder layers (n_layers % len(pattern)) are
+applied as an explicit tail.
+
+Three execution paths share the same block code:
+  train/forward  - full sequence, no caches (optionally remat per cycle)
+  prefill        - full sequence, additionally returns per-layer decode caches
+  decode         - one token against caches
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.imc_linear import layer_rng
+from repro.launch.sharding import ws
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rg_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+
+# ---------------------------------------------------------------------------
+# per-kind init
+# ---------------------------------------------------------------------------
+
+
+def attn_dims(cfg: ArchConfig, kind: str) -> attn_lib.AttnDims:
+    hd = cfg.resolved_head_dim
+    return attn_lib.AttnDims(
+        n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv_heads,
+        head_dim=hd,
+        scale=cfg.attn_logit_scale or hd**-0.5,
+        softcap_val=cfg.attn_softcap,
+        window=cfg.window if kind == "local" else None,
+        q_block=cfg.flash_q_block,
+        kv_block=cfg.flash_kv_block,
+        rope_theta=cfg.rope_theta,
+        use_rope=cfg.pos_kind == "rope",
+    )
+
+
+def init_block(key, cfg: ArchConfig, kind: str, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm1": init_norm(cfg.norm_kind, d, dtype)}
+    if cfg.post_norm:
+        p["norm1_post"] = init_norm(cfg.norm_kind, d, dtype)
+    if kind in ("attn", "local"):
+        p["mixer"] = attn_lib.init_attention(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, dtype
+        )
+    elif kind == "ssm":
+        p["mixer"] = ssm_lib.init_ssm(
+            ks[0], d, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_groups,
+            cfg.ssm_state, cfg.conv_width, dtype,
+        )
+        return p  # mamba2 blocks have no separate MLP
+    elif kind == "rglru":
+        p["mixer"] = rg_lib.init_rglru(ks[0], d, cfg.rnn_width,
+                                       cfg.rnn_conv_width, dtype)
+    else:
+        raise ValueError(kind)
+    p["norm2"] = init_norm(cfg.norm_kind, d, dtype)
+    if cfg.post_norm:
+        p["norm2_post"] = init_norm(cfg.norm_kind, d, dtype)
+    if cfg.n_experts > 0:
+        p["moe"] = moe_lib.init_moe(ks[1], d, cfg.d_ff, cfg.n_experts,
+                                    cfg.mlp_kind, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_kind, dtype)
+    return p
+
+
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int, cache_len: int, dtype):
+    if kind in ("attn", "local"):
+        span = min(cfg.window, cache_len) if kind == "local" else cache_len
+        return attn_lib.init_kv_cache(
+            batch, span, cfg.n_kv_heads, cfg.resolved_head_dim, dtype
+        )
+    if kind == "ssm":
+        return ssm_lib.init_ssm_cache(batch, cfg, dtype)
+    if kind == "rglru":
+        return rg_lib.init_rglru_cache(batch, cfg.rnn_width, cfg.rnn_conv_width, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# per-kind apply
+# ---------------------------------------------------------------------------
+
+
+def _mlp_half(p, x, cfg: ArchConfig, rng):
+    h = apply_norm(p["norm2"], x, cfg.norm_kind)
+    if cfg.n_experts > 0:
+        out, aux = moe_lib.apply_moe(
+            p["moe"], h, cfg.n_experts, cfg.top_k, cfg.capacity_factor,
+            cfg.moe_group_size, cfg.mlp_kind, cfg.imc, rng,
+        )
+    else:
+        out, aux = apply_mlp(p["mlp"], h, cfg.mlp_kind, cfg.imc, rng), 0.0
+    if cfg.post_norm:
+        out = apply_norm(p["norm2_post"], out, cfg.norm_kind)
+    return ws(x + out, "act_btd"), aux
+
+
+def apply_block_full(
+    p,
+    x,  # (B, S, d)
+    cfg: ArchConfig,
+    kind: str,
+    positions,  # (B, S)
+    rng,
+    want_cache: bool,
+    cache_len: int,
+):
+    """Full-sequence block. Returns (x, cache_or_None, moe_aux)."""
+    h = apply_norm(p["norm1"], x, cfg.norm_kind)
+    cache = None
+    if kind in ("attn", "local"):
+        dims = attn_dims(cfg, kind)
+        q, k, v = attn_lib._project_qkv(p["mixer"], h, dims, positions, cfg.imc, rng)
+        if dims.window is not None and dims.window < h.shape[1]:
+            ctx = attn_lib.banded_attention(q, k, v, dims)
+        else:
+            ctx = attn_lib.flash_attention(q, k, v, dims)
+        b, s = h.shape[:2]
+        ctx = ctx.reshape(b, s, dims.n_heads * dims.head_dim)
+        out = attn_lib.linear(p["mixer"]["wo"], ctx, cfg.imc, rng)
+        if want_cache:
+            cache = _pack_kv_cache(k, v, cache_len, dims.window, x.dtype)
+    elif kind == "ssm":
+        out, state = ssm_lib.ssm_forward(p["mixer"], h, cfg, cfg.imc, rng)
+        if want_cache:
+            cache = _pack_ssm_cache(p, h, state, cfg, x.dtype)
+        x = x + (apply_norm(p["norm1_post"], out, cfg.norm_kind)
+                 if cfg.post_norm else out)
+        return ws(x, "act_btd"), cache, 0.0  # mamba2: no MLP half
+    elif kind == "rglru":
+        out, h_last = rg_lib.rglru_forward(p["mixer"], h, cfg, cfg.imc, rng)
+        if want_cache:
+            cache = _pack_rglru_cache(p, h, h_last, cfg, x.dtype)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norm:
+        out = apply_norm(p["norm1_post"], out, cfg.norm_kind)
+    x = x + out
+    x = ws(x, "act_btd")
+    x, aux = _mlp_half(p, x, cfg, rng)
+    return x, cache, aux
+
+
+def apply_block_decode(p, x, cfg: ArchConfig, kind: str, cache, pos, rng):
+    """One-token block. Returns (x, new_cache)."""
+    h = apply_norm(p["norm1"], x, cfg.norm_kind)
+    if kind in ("attn", "local"):
+        dims = attn_dims(cfg, kind)
+        out, new_cache = attn_lib.attention_decode(
+            p["mixer"], h, cache, pos, dims, cfg.imc, rng
+        )
+    elif kind == "ssm":
+        out, new_cache = ssm_lib.ssm_decode(p["mixer"], h, cache, cfg, cfg.imc, rng)
+        x = x + (apply_norm(p["norm1_post"], out, cfg.norm_kind)
+                 if cfg.post_norm else out)
+        return x, new_cache
+    elif kind == "rglru":
+        out, new_cache = rg_lib.rglru_decode(p["mixer"], h, cache, cfg, cfg.imc, rng)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norm:
+        out = apply_norm(p["norm1_post"], out, cfg.norm_kind)
+    x = x + out
+    x, _ = _mlp_half(p, x, cfg, rng)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill cache packing
+# ---------------------------------------------------------------------------
+
+
+def _pack_kv_cache(k, v, cache_len: int, window: Optional[int], dtype):
+    """Arrange prefill K/V into the decode cache layout."""
+    b, s = k.shape[:2]
+    if window is None:
+        pad = cache_len - s
+        assert pad >= 0, (cache_len, s)
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
+        return {"k": kc, "v": vc}
+    w = min(window, cache_len)
+    if s >= w:
+        k_last, v_last = k[:, s - w :], v[:, s - w :]
+        shift = s % w
+        kc = jnp.roll(k_last, shift, axis=1)
+        vc = jnp.roll(v_last, shift, axis=1)
+    else:
+        kc = jnp.pad(k, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+    return {"k": kc.astype(dtype), "v": vc.astype(dtype)}
+
+
+def _pack_ssm_cache(p, h_in, state, cfg: ArchConfig, dtype):
+    """SSD decode cache from prefill: final state + last conv-window inputs."""
+    from repro.core.imc_linear import linear as _linear
+
+    proj = _linear(p["mixer"]["in_proj"], h_in[:, -(cfg.conv_width - 1):], cfg.imc)
+    d_inner, n_heads, conv_ch = ssm_lib.ssm_dims(
+        cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    )
+    gn = cfg.ssm_groups * cfg.ssm_state
+    xbc = proj[..., d_inner : 2 * d_inner + 2 * gn]
+    return {"conv": xbc.astype(dtype), "state": state}
+
+
+def _pack_rglru_cache(p, h_in, h_last, cfg: ArchConfig, dtype):
+    from repro.core.imc_linear import linear as _linear
+
+    xb = _linear(p["mixer"]["rg_x"], h_in[:, -(cfg.rnn_conv_width - 1):], cfg.imc)
+    return {"conv": xb.astype(dtype), "h": h_last}

@@ -1,0 +1,113 @@
+"""Hand-rolled AdamW with decoupled weight decay, global-norm clipping, and
+bf16-param / f32-state mixed precision.
+
+State layout mirrors the param pytree (so parameter sharding specs apply
+directly to m/v - combined with FSDP param sharding this is ZeRO-1/3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # parameters whose path matches are excluded from weight decay
+    no_decay_substrings: Tuple[str, ...] = ("scale", "bias", "norm", "A_log",
+                                            "dt_bias", "rg_a")
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def init(params) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return OptState(m=zeros, v=jax.tree_util.tree_map(jnp.copy, zeros),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def update(
+    grads,
+    state: OptState,
+    params,
+    cfg: AdamWConfig,
+    lr: jax.Array,
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    count = state.count + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    paths_decay = _decay_mask(params, cfg)
+
+    def upd(path_decay, g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if path_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [
+        upd(d, g, m, v, p)
+        for d, g, m, v, p in zip(paths_decay, flat_g, flat_m, flat_v, flat_p)
+    ]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "clip_scale": scale}
+    return new_p, OptState(new_m, new_v, count), metrics
+
+
+def _decay_mask(params, cfg: AdamWConfig):
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    mask = []
+    for path, _leaf in flat:
+        pstr = jax.tree_util.keystr(path).lower()
+        mask.append(not any(s in pstr for s in cfg.no_decay_substrings))
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def sched(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched

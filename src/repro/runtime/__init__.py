@@ -1,0 +1,2 @@
+"""Fault-tolerant runtime: retries, deadlines, elastic re-mesh."""
+from repro.runtime.fault import FaultConfig, StepTimeout, TrainLoopRunner, elastic_remesh  # noqa: F401

@@ -1,0 +1,14 @@
+"""Test config: tests run on the single real CPU device (the 512-device
+dry-run is exercised only via subprocesses in test_distributed/test_dryrun)."""
+import os
+
+# make sure no leaked XLA_FLAGS turn tests multi-device
+os.environ.pop("XLA_FLAGS", None)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,93 @@
+"""BGC / tBGC / MPC output-precision criteria (paper SSIII-C/D, Fig. 4)."""
+import numpy as np
+import pytest
+
+from repro.core import precision as prec
+from repro.core.quant import SignalStats, UNIFORM_STATS, db
+from repro.core import snr as snr_lib
+
+
+def test_bgc_formula():
+    assert prec.by_bgc(7, 7, 1024) == 24
+    assert prec.by_bgc(7, 7, 16) == 18
+    assert prec.by_bgc(8, 1, 256) == 17
+
+
+def test_gaussian_clip_stats():
+    p_c, scc = prec.gaussian_clip_stats(4.0)
+    assert p_c < 1e-3  # paper: p_c < 0.001 at 4 sigma
+    assert p_c > 1e-6
+    # MC check
+    rng = np.random.default_rng(0)
+    y = rng.normal(size=5_000_000)
+    emp_pc = np.mean(np.abs(y) > 4.0)
+    assert abs(emp_pc - p_c) / p_c < 0.3
+
+
+def test_mpc_optimal_zeta_is_four():
+    """Fig. 4(b): SQNR_qy^MPC maximized at clip = 4 sigma for Gaussian."""
+    for by in (6, 8, 10):
+        z = prec.optimal_zeta(by)
+        assert 3.0 < z < 5.2, (by, z)
+    # and specifically ~4 at B_y = 8 (the paper's example)
+    assert abs(prec.optimal_zeta(8) - 4.0) < 0.3
+
+
+def test_mpc_sqnr_against_empirical():
+    """Eq. (14) vs actually clip-quantizing Gaussian samples."""
+    rng = np.random.default_rng(1)
+    y = rng.normal(size=400_000)
+    for by in (6, 8):
+        ana = float(prec.sqnr_qy_mpc_db(by, 4.0))
+        emp = 10 * np.log10(prec.sqnr_qy_mpc_empirical(y, by, 4.0))
+        assert abs(ana - emp) < 0.6, (by, ana, emp)
+
+
+def test_mpc_meets_40db_with_8_bits_bgc_needs_growth():
+    """Fig. 4(a) anchors: MPC B_y = 8 achieves ~40 dB independent of N;
+    BGC assigns 16-20 bits over the N sweep; tBGC at B_y = 8 fails for large N."""
+    stats = UNIFORM_STATS
+    assert float(prec.sqnr_qy_mpc_db(8, 4.0)) >= 40.0
+    for n, lo, hi in [(16, 16, 20), (1024, 20, 26)]:
+        assert lo <= prec.by_bgc(7, 7, n) <= hi
+    # tBGC (full range, B_y = 8): degrades with N (eq. 9)
+    t16 = float(prec.sqnr_qy_fullrange_db_approx(8, 16, stats))
+    t1024 = float(prec.sqnr_qy_fullrange_db_approx(8, 1024, stats))
+    assert t1024 < t16 - 15
+    assert t1024 < 40.0  # fails the requirement
+
+
+def test_mpc_by_lower_bound():
+    """Eq. (15): gamma = 0.5 -> B_y >= (SNR_A + 16.3)/6."""
+    for snr_a in (20.0, 30.0, 40.0):
+        by = prec.by_mpc_lower_bound(snr_a, 0.5)
+        assert by == int(np.ceil((snr_a + 16.3) / 6.0))
+
+
+def test_snr_composition_margin():
+    """SSIII-B: SQNR 9 dB above SNR -> <= 0.5 dB degradation."""
+    deg = float(snr_lib.degradation_db(30.0, 39.0))
+    assert deg <= 0.52
+    m = float(snr_lib.margin_for_degradation(0.5))
+    assert 8.5 < m < 9.7
+
+
+def test_snr_t_bounded_by_snr_a():
+    """The fundamental limit: SNR_T <= SNR_a regardless of precisions."""
+    rng = np.random.default_rng(2)
+    for _ in range(50):
+        snr_a = rng.uniform(5, 45)
+        qiy = rng.uniform(0, 60)
+        qy = rng.uniform(0, 60)
+        t = float(snr_lib.compose_snr_db(snr_a, qiy, qy))
+        assert t <= snr_a + 1e-6
+
+
+def test_assign_precisions_end_to_end():
+    pa = prec.assign_precisions(snr_a_db=25.0, n=256, stats=UNIFORM_STATS)
+    assert pa.snr_t_db > 24.0  # within ~1 dB of SNR_a
+    assert pa.by <= prec.by_bgc(pa.bx, pa.bw, 256) - 4  # far fewer bits than BGC
+    pa_bgc = prec.assign_precisions(
+        snr_a_db=25.0, n=256, stats=UNIFORM_STATS, criterion="bgc"
+    )
+    assert pa_bgc.by > pa.by

@@ -1,0 +1,146 @@
+"""Quantizer + SQNR fundamentals (paper SSII), incl. hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+from repro.core.quant import (
+    QuantSpec,
+    SignalStats,
+    UNIFORM_STATS,
+    bit_planes,
+    combine_bit_planes,
+    db,
+    dequantize,
+    fakequant,
+    quantize,
+    sqnr_qiy,
+    sqnr_qiy_db_approx,
+)
+
+
+# ---------------------------------------------------------------------------
+# quantizer invariants (property-based)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    bits=st.integers(2, 10),
+    signed=st.booleans(),
+    max_val=st.floats(0.1, 100.0),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=30, deadline=None)
+def test_quantizer_error_bounded(bits, signed, max_val, seed):
+    spec = QuantSpec(bits, signed, max_val)
+    rng = np.random.default_rng(seed)
+    lo = -max_val if signed else 0.0
+    x = rng.uniform(lo, max_val, size=(256,))
+    xq = np.asarray(fakequant(jnp.asarray(x), spec))
+    # in-range values: error <= Delta/2 (+ Delta at the top clip edge)
+    assert np.all(np.abs(xq - x) <= spec.delta * 1.001 + 1e-7)
+
+
+@given(bits=st.integers(2, 10), signed=st.booleans(), seed=st.integers(0, 2**16))
+@settings(max_examples=30, deadline=None)
+def test_quantize_idempotent(bits, signed, seed):
+    spec = QuantSpec(bits, signed, 1.0)
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1 if signed else 0, 1, size=(128,))
+    once = fakequant(jnp.asarray(x), spec)
+    twice = fakequant(once, spec)
+    assert np.allclose(np.asarray(once), np.asarray(twice))
+
+
+@given(bits=st.integers(2, 9), signed=st.booleans(), seed=st.integers(0, 2**16))
+@settings(max_examples=30, deadline=None)
+def test_bit_plane_roundtrip(bits, signed, seed):
+    rng = np.random.default_rng(seed)
+    lo = -(2 ** (bits - 1)) if signed else 0
+    hi = (2 ** (bits - 1)) if signed else 2**bits
+    codes = jnp.asarray(rng.integers(lo, hi, size=(64,)), jnp.float32)
+    planes, weights = bit_planes(codes, bits, signed)
+    assert np.all((np.asarray(planes) == 0) | (np.asarray(planes) == 1))
+    rec = combine_bit_planes(planes, weights)
+    assert np.allclose(np.asarray(rec), np.asarray(codes))
+
+
+# ---------------------------------------------------------------------------
+# SQNR: 6 dB per bit (eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def test_six_db_per_bit():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(-1, 1, size=(200_000,)))
+    prev = None
+    for bits in range(4, 10):
+        spec = QuantSpec(bits, True, 1.0)
+        err = np.asarray(fakequant(x, spec) - x)
+        snr_db = 10 * np.log10(np.var(np.asarray(x)) / np.mean(err**2))
+        if prev is not None:
+            assert 5.7 < snr_db - prev < 6.4, (bits, snr_db - prev)
+        prev = snr_db
+
+
+def test_sqnr_matches_rule_of_thumb():
+    """For U[-1,1]: SQNR(dB) = 6.02B + 4.77 - 4.77 = 6.02B."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.uniform(-1, 1, size=(400_000,)))
+    spec = QuantSpec(8, True, 1.0)
+    err = np.asarray(fakequant(x, spec) - x)
+    snr_db = 10 * np.log10(np.var(np.asarray(x)) / np.mean(err**2))
+    assert abs(snr_db - 6.0206 * 8) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# PAR values (paper SSIII-E anchors)
+# ---------------------------------------------------------------------------
+
+
+def test_paper_par_anchors():
+    s = UNIFORM_STATS
+    assert abs(float(db(s.zeta_x_sq)) - (-1.3)) < 0.1  # paper: -1.3 dB
+    assert abs(float(db(s.zeta_w_sq)) - 4.8) < 0.1  # paper: 4.8 dB
+
+
+def test_sqnr_qiy_paper_anchor():
+    """Bx = Bw = 7 with uniform stats -> 41 dB (paper SSIII-E)."""
+    val = float(sqnr_qiy_db_approx(7, 7, UNIFORM_STATS))
+    assert abs(val - 41.0) < 0.5
+
+
+def test_sqnr_qiy_exact_vs_monte_carlo():
+    """Eq. (5)/(8) against an actual quantized DP ensemble."""
+    n, bx, bw = 256, 6, 6
+    rng = np.random.default_rng(3)
+    x = rng.uniform(0, 1, size=(2000, n))
+    w = rng.uniform(-1, 1, size=(2000, n))
+    xs = QuantSpec(bx, False, 1.0)
+    ws_ = QuantSpec(bw, True, 1.0)
+    xq = np.asarray(fakequant(jnp.asarray(x), xs))
+    wq = np.asarray(fakequant(jnp.asarray(w), ws_))
+    y = np.sum(w * x, -1)
+    yq = np.sum(wq * xq, -1)
+    emp_db = 10 * np.log10(np.var(y) / np.var(yq - y))
+    ana_db = float(db(sqnr_qiy(n, bx, bw, UNIFORM_STATS)))
+    assert abs(emp_db - ana_db) < 0.7, (emp_db, ana_db)
+
+
+def test_sqnr_qiy_independent_of_n():
+    for n in (16, 128, 1024):
+        assert abs(
+            float(db(sqnr_qiy(n, 6, 6, UNIFORM_STATS)))
+            - float(sqnr_qiy_db_approx(6, 6, UNIFORM_STATS))
+        ) < 1e-3
+
+
+def test_fakequant_ste_gradient():
+    spec = QuantSpec(4, True, 1.0)
+    g = jax.grad(lambda x: jnp.sum(quant.fakequant_ste(x, spec) ** 2))(
+        jnp.asarray([0.3, -0.7])
+    )
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert not np.allclose(np.asarray(g), 0.0)

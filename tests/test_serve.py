@@ -1,0 +1,59 @@
+"""Serving driver tests + vocab padding semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch import serve as serve_mod
+from repro.models import forward, init_params
+
+
+@pytest.mark.slow
+def test_serve_batched_requests():
+    out = serve_mod.main([
+        "--arch", "musicgen-medium", "--smoke", "--batch", "4",
+        "--requests", "8", "--prompt-len", "12", "--gen", "6",
+    ])
+    assert len(out) == 8
+    assert all(len(r.out) == 6 for r in out)
+
+
+@pytest.mark.slow
+def test_serve_imc_mode_changes_tokens():
+    """IMC analog noise at a low design point must alter generations."""
+    base = serve_mod.main([
+        "--arch", "musicgen-medium", "--smoke", "--batch", "2",
+        "--requests", "2", "--prompt-len", "12", "--gen", "6",
+    ])
+    noisy = serve_mod.main([
+        "--arch", "musicgen-medium", "--smoke", "--batch", "2",
+        "--requests", "2", "--prompt-len", "12", "--gen", "6",
+        "--imc-mode", "imc_analytic", "--imc-vwl", "0.55",
+    ])
+    agree = np.mean([
+        np.mean(np.array(a.out) == np.array(b.out))
+        for a, b in zip(base, noisy)
+    ])
+    assert agree < 1.0  # low-SNR analog core perturbs decoding
+
+
+def test_vocab_padding_masked():
+    """Padded vocab rows must never win argmax and never receive probability."""
+    cfg = configs.get_smoke("internvl2-2b")  # vocab 512 -> padded 512 (even)
+    cfg = cfg.replace(vocab_size=500)  # force padding to 512
+    assert cfg.padded_vocab == 512
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 500)
+    pe = jax.random.normal(jax.random.PRNGKey(2), (2, cfg.prefix_len, cfg.d_model))
+    logits, _ = forward(params, cfg, toks, pe)
+    assert logits.shape[-1] == 512
+    assert bool(jnp.all(logits[..., 500:] <= -1e8))
+    assert bool(jnp.all(jnp.argmax(logits, -1) < 500))
+
+
+def test_param_count_excludes_padding():
+    cfg = configs.get("internvl2-2b")
+    assert cfg.padded_vocab == 92672
+    # param_count uses true vocab (MODEL_FLOPS bookkeeping)
+    assert cfg.param_count() < 92672 * cfg.d_model * 2 + 10_000_000_000

@@ -1,0 +1,80 @@
+"""Sharding-rule unit tests (pure logic, no devices)."""
+import subprocess
+import sys
+import os
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as shd
+
+
+def test_param_spec_rules():
+    assert shd.param_spec("embed", 2, False) == P("model", None)
+    assert shd.param_spec("blocks/p0/mixer/wq", 3, True) == P(None, None, "model")
+    assert shd.param_spec("blocks/p0/mixer/wo", 3, True) == P(None, "model", None)
+    assert shd.param_spec("blocks/p0/moe/experts/wi", 4, True) == P(
+        None, "model", None, None)
+    assert shd.param_spec("final_norm/scale", 1, False) == P(None)
+    assert shd.param_spec("blocks/p0/mixer/in_proj", 3, True) == P(
+        None, None, "model")
+
+
+def test_ws_noop_outside_context():
+    import jax.numpy as jnp
+
+    x = jnp.zeros((4, 4))
+    assert shd.ws(x, "act_btd") is x
+    qg = jnp.zeros((1, 2, 2, 2, 2))
+    q2, k2, v2 = shd.ws_attn(qg, jnp.zeros((1, 2, 2, 2)), jnp.zeros((1, 2, 2, 2)))
+    assert q2 is qg
+    assert shd.attn_carry_pin(8, 6)(x) is x
+    assert shd.moe_vmap_axes() is None
+    assert not shd.attn_expand_groups(8, 6)
+
+
+SPEC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.launch import steps, sharding as shd
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((4, 4), ("data", "model"))
+
+# _fix_spec relocates model off a non-divisible dim
+spec = steps._fix_spec(P("model", None), (92553, 2048), mesh)
+assert spec == P(None, "model"), spec
+# drops when nothing fits
+spec2 = steps._fix_spec(P("model", None), (7, 13), mesh)
+assert spec2 == P(None, None), spec2
+# fsdp adds the dp axes to the largest free dim of big params
+spec3 = steps._add_fsdp(P(None, "model"), (4096, 4096), mesh)
+assert spec3 == P("data", "model"), spec3
+# small params untouched
+spec4 = steps._add_fsdp(P(), (16, 16), mesh)
+assert spec4 == P(), spec4
+
+# MQA/GQA-aware helpers under an active rules context
+with shd.axis_rules(mesh, steps.train_rules(mesh)):
+    assert shd.attn_expand_groups(2, 6)       # hkv=2 %4!=0, g=6 %4!=0, 12%4==0
+    assert not shd.attn_expand_groups(4, 3)   # hkv divides
+    assert shd.moe_vmap_axes() == "data"
+with shd.axis_rules(mesh, steps.train_rules(mesh, backward=False)):
+    assert not shd.attn_expand_groups(2, 6)   # gated off for prefill
+print("SPEC_OK")
+"""
+
+
+@pytest.mark.slow
+def test_spec_helpers_with_mesh():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SPEC_SCRIPT],
+                       capture_output=True, text=True,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), env=env, timeout=600)
+    assert "SPEC_OK" in r.stdout, r.stdout + r.stderr[-2000:]
