@@ -1,11 +1,28 @@
 """Benchmark orchestrator (deliverable (d)): one entry per paper table/figure
 plus the roofline + beyond-paper extensions.  Prints ``name,value,derived``
-CSV rows (value is dB / fJ / seconds / count as per the name)."""
+CSV rows (value is dB / fJ / seconds / count as per the name).
+
+``--json PATH`` additionally writes a machine-readable report.  Suites that
+expose ``bench_records()`` (currently the kernel micro-bench) contribute
+structured per-shape records - wall time plus structural counters (MXU
+calls, HBM bytes per operand class, noise-operand bytes before/after the
+in-kernel-RNG rewrite); other suites contribute their CSV rows as dicts.
+The committed ``BENCH_kernels.json`` baseline is produced with::
+
+    PYTHONPATH=src python benchmarks/run.py --only kernel --json BENCH_kernels.json
+"""
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+# make `python benchmarks/run.py` work from anywhere (repo root on sys.path)
+sys.path.insert(
+    0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
 
 
 def main() -> None:
@@ -13,7 +30,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig9,fig10,fig11,fig12,fig13,"
                          "pareto,layer_snr,model_energy,kernel,roofline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write a machine-readable JSON report")
     args = ap.parse_args()
+    if args.json:
+        json_dir = os.path.dirname(os.path.abspath(args.json)) or "."
+        if not os.path.isdir(json_dir):
+            ap.error(f"--json: directory does not exist: {json_dir}")
+
+    import jax
 
     from benchmarks import kernel_bench, layer_snr, model_energy, roofline
     from benchmarks.paper_figures import ALL as FIG_BENCHES
@@ -24,23 +49,50 @@ def main() -> None:
     suites["model_energy"] = model_energy.run
     suites["kernel"] = kernel_bench.run
     suites["roofline"] = roofline.run
+    # suites with structured records: run once, derive the CSV rows from them
+    record_fns = {"kernel": (kernel_bench.bench_records,
+                             kernel_bench.rows_from_records)}
 
     only = set(args.only.split(",")) if args.only else None
+    payload = {
+        "schema": "repro-imc-bench/v1",
+        "backend": jax.default_backend(),
+        "suites": {},
+    }
     print("name,value,derived")
     for name, fn in suites.items():
         if only and name not in only:
             continue
         t0 = time.perf_counter()
         try:
-            rows = fn()
+            if args.json and name in record_fns:
+                records_fn, rows_fn = record_fns[name]
+                records = records_fn()
+                rows = rows_fn(records)
+            else:
+                records = None
+                rows = fn()
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            payload["suites"][name] = {"error": f"{type(e).__name__}: {e}"}
             continue
         dt = time.perf_counter() - t0
         for rname, val, derived in rows:
             print(f'{rname},{val},"{derived}"')
         print(f'{name}/_suite_s,{dt:.2f},"suite wall time"')
         sys.stdout.flush()
+        if records is None:
+            records = [
+                {"name": rname, "value": val, "derived": derived}
+                for rname, val, derived in rows
+            ]
+        payload["suites"][name] = {"wall_s": round(dt, 2), "records": records}
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

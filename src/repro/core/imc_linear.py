@@ -13,6 +13,9 @@ one of four modes (ExecMode):
                  dry-run scale; pure-jnp => shards under pjit.
   imc_bitserial  bit-exact QS-Arch simulation via the Pallas kernel
                  (repro.kernels) - for silicon-fidelity studies at layer scale.
+                 Per-plane analog noise is generated inside the kernel from a
+                 scalar seed derived from the layer key: no noise tensor is
+                 materialized at any point in this path.
 
 The mode and design knobs live in IMCConfig, threaded through model configs.
 Per-layer RNG is derived with jax.random.fold_in over a static layer id.

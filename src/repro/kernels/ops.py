@@ -1,9 +1,16 @@
 """Public jit'd wrappers around the IMC matmul kernels.
 
 These take real-valued activations/weights, perform the input quantization
-(paper SSII), derive per-plane noise sigmas from the core analytics, draw the
-noise operands, and dispatch to either the Pallas kernel or the pure-jnp
-oracle (ref.py).
+(paper SSII), derive per-plane noise sigmas from the core analytics, and
+dispatch to either the Pallas kernel or the pure-jnp oracle (ref.py).
+
+Noise plumbing: analog noise is generated *inside* the kernels (or lazily,
+plane-by-plane, inside the oracle) from a scalar int32 seed derived from the
+caller's PRNG key.  No per-plane noise tensor is drawn or materialized here -
+the seed design streamed an O(n_banks*Bw*Bx*B*M) noise operand through HBM;
+this wrapper now ships 4 bytes.  The only remaining weight-shaped draw is the
+optional (K, M) spatial per-cell mismatch gain (paper eq. 18), which is a
+fixed per-die quantity, not per-call noise traffic.
 """
 from __future__ import annotations
 
@@ -13,7 +20,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import imc_mvm, ref
 from repro.kernels.ref import AnalyticSpec, BitSerialSpec, quantize_codes
@@ -69,6 +75,12 @@ def _quantize_operands(x, w, cfg: IMCMatmulConfig, x_max=None, w_max=None):
     return xc, wc, dx, dw
 
 
+def _seed_from_key(key: jax.Array) -> jax.Array:
+    """Derive the scalar int32 kernel noise seed from a jax PRNG key."""
+    bits = jax.random.bits(key, (), jnp.uint32)
+    return jax.lax.bitcast_convert_type(bits, jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def imc_matmul(
     x: jax.Array,  # (B, K) real
@@ -100,25 +112,24 @@ def imc_matmul(
             sigma_out = 0.0
         spec = AnalyticSpec(
             b_adc=cfg.b_adc,
-            sigma_out=sigma_out,  # scaled below by sigma_yo via noise operand
+            sigma_out=sigma_out,  # in sigma_yo units; operands scaled below
             y_clip=cfg.y_clip_sigmas,  # in sigma_yo units, scaled below
             apply_adc=True,
         )
-        noise = None
+        seed = None
         if key is not None and sigma_out > 0.0:
-            noise = jax.random.normal(key, (b_sz, m), dtype=jnp.float32)
+            seed = _seed_from_key(key)
         # spec constants (sigma_out, y_clip) are in sigma_yo units; scale the
         # operands by 1/sigma_yo so they apply exactly while staying static.
         xs = xc / sigma_yo_codes
         if cfg.use_kernel:
-            y = imc_mvm.imc_analytic_matmul(xs, wc, noise, spec,
+            y = imc_mvm.imc_analytic_matmul(xs, wc, spec, seed=seed,
                                             interpret=cfg.interpret)
         else:
-            y = ref.imc_analytic_ref(xs, wc, noise, spec)
+            y = ref.imc_analytic_ref(xs, wc, spec, seed=seed)
         return y * sigma_yo_codes * (dx * dw)
 
     if cfg.mode == "imc_bitserial":
-        n_banks = -(-k // cfg.rows)
         spec = BitSerialSpec(
             bx=cfg.bx,
             bw=cfg.bw,
@@ -128,9 +139,10 @@ def imc_matmul(
             v_c=cfg.v_c_counts,
             x_signed=cfg.x_signed,
             apply_adc=True,
+            sigma_noise=cfg.sigma_thermal_counts,
         )
         w_gain = None
-        noise = None
+        seed = None
         if key is not None:
             k_sp, k_th = jax.random.split(key)
             if cfg.sigma_d > 0.0:
@@ -140,14 +152,12 @@ def imc_matmul(
                     k_sp, (k, m), dtype=jnp.float32
                 )
             if cfg.sigma_thermal_counts > 0.0:
-                noise = cfg.sigma_thermal_counts * jax.random.normal(
-                    k_th, (n_banks, cfg.bw * cfg.bx, b_sz, m), dtype=jnp.float32
-                )
+                seed = _seed_from_key(k_th)
         if cfg.use_kernel:
-            y = imc_mvm.imc_bitserial_matmul(xc, wc, w_gain, noise, spec,
+            y = imc_mvm.imc_bitserial_matmul(xc, wc, w_gain, spec, seed=seed,
                                              interpret=cfg.interpret)
         else:
-            y = ref.imc_bitserial_ref(xc, wc, w_gain, noise, spec)
+            y = ref.imc_bitserial_ref(xc, wc, w_gain, spec, seed=seed)
         return y * (dx * dw)
 
     raise ValueError(f"unknown mode {cfg.mode!r}")

@@ -12,9 +12,20 @@ Shared semantics (QS-Arch bit-serial simulation, paper SSIV-B2):
           ADC( min( xplane_j[b, :] . wplane_i[:, m], k_h ) + noise )
 
 with two's-complement bit planes (s = -1 for sign planes), per-plane headroom
-clipping at k_h counts, additive per-plane analog noise (operand), and a
-B_adc-bit ADC over [0, v_c] counts ([-v_c, v_c] when planes can be negative -
-they cannot: plane DPs are counts >= 0).
+clipping at k_h counts, additive per-plane analog noise, and a B_adc-bit ADC
+over [0, v_c] counts ([-v_c, v_c] when planes can be negative - they cannot:
+plane DPs are counts >= 0).
+
+Noise oracle mode: the kernels generate their per-plane temporal noise
+in-kernel from the counter-based PRNG in :mod:`repro.kernels.prng`, keyed by
+global ``(bank, plane, b, m)`` indices.  The oracles here reproduce the same
+draws from the same ``seed`` - materializing at most one bank's planes at a
+time - so interpret-mode kernel output matches the oracle draw-for-draw.
+The only permitted divergence is last-ulp FMA-contraction differences
+between the two XLA graphs, which can flip a single ADC code on rounding
+knife edges (tests bound this below 0.1% of elements).  On real TPU the
+kernel uses the hardware PRNG instead and equivalence is statistical: same
+N(0, sigma_noise) marginals.
 """
 from __future__ import annotations
 
@@ -24,6 +35,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels import prng
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +51,7 @@ class BitSerialSpec:
     v_c: float = 1e9  # ADC full-scale in counts (>= k_h typically)
     x_signed: bool = False  # unsigned (ReLU) vs signed activations
     apply_adc: bool = True
+    sigma_noise: float = 0.0  # per-plane temporal noise std in counts (eq. 20)
 
     @property
     def n_x_planes(self) -> int:
@@ -90,6 +104,32 @@ def adc_transfer(v, b_adc: int, v_c: float):
     return (code + 0.5) * delta
 
 
+def mpc_adc(v, b_adc: int, y_clip: float):
+    """Signed B_adc-bit MPC output ADC over [-y_clip, y_clip]."""
+    delta = 2.0 * y_clip / (2.0**b_adc)
+    code = jnp.clip(
+        jnp.round(v / delta),
+        -(2.0 ** (b_adc - 1)),
+        2.0 ** (b_adc - 1) - 1,
+    )
+    return code * delta
+
+
+def bitserial_bank_noise(seed, bank: int, n_planes: int, b_sz: int, m: int):
+    """The (n_planes, B, M) standard-normal draws the kernel generates for
+    ``bank`` - same counter sites as the in-kernel fallback PRNG (plane index
+    p = i*Bx + j).  One vectorized hash call per bank: issuing a separate
+    hash chain per plane makes the traced XLA graph pathologically slow to
+    compile (~100 chains at Bw=Bx=7), while the per-bank peak memory stays a
+    factor n_banks below the seed design's full noise tensor."""
+    p_idx = jnp.arange(n_planes, dtype=jnp.int32)[:, None, None]
+    b_idx = jnp.arange(b_sz, dtype=jnp.int32)[None, :, None]
+    m_idx = jnp.arange(m, dtype=jnp.int32)[None, None, :]
+    return prng.counter_normal(
+        seed, prng.TAG_BITSERIAL, bank, p_idx, b_idx, m_idx
+    )
+
+
 # ---------------------------------------------------------------------------
 # bit-serial oracle
 # ---------------------------------------------------------------------------
@@ -99,8 +139,8 @@ def imc_bitserial_ref(
     x_codes: jax.Array,  # (B, K) float32 integer codes
     w_codes: jax.Array,  # (K, M) float32 integer codes
     w_gain: Optional[jax.Array],  # (K, M) per-cell current gain (1 + eps) or None
-    noise: Optional[jax.Array],  # (n_banks, Bw*Bx, B, M) additive counts or None
     spec: BitSerialSpec,
+    seed: Optional[jax.Array] = None,  # scalar int32 noise seed, or None
 ) -> jax.Array:
     """Returns the recombined integer-code DP (B, M) in *code units*
     (caller multiplies by Delta_x*Delta_w to get real units).
@@ -109,8 +149,10 @@ def imc_bitserial_ref(
     same cell gain multiplies that cell's contribution in every bit plane
     (mismatch is fixed per physical cell), which is what makes the mismatch
     noise recombine like the signal (Table III: sigma_eta_e^2 ~ N sigma_D^2/9).
-    ``noise`` models per-plane *temporal* noise (thermal, eq. 20) - independent
-    draws per plane evaluation.
+    ``seed`` enables per-plane *temporal* noise (thermal, eq. 20) with std
+    ``spec.sigma_noise`` counts - independent draws per plane evaluation,
+    generated from the shared counter PRNG (the same draws the
+    interpret-mode kernel produces under the same seed).
     """
     b_sz, k = x_codes.shape
     k2, m = w_codes.shape
@@ -123,6 +165,7 @@ def imc_bitserial_ref(
         if w_gain is not None:
             w_gain = jnp.pad(w_gain, ((0, pad), (0, 0)), constant_values=1.0)
     ww, xw = spec.plane_weights()
+    has_noise = seed is not None and spec.sigma_noise > 0.0
 
     acc = jnp.zeros((b_sz, m), dtype=jnp.float32)
     for bank in range(n_banks):
@@ -130,6 +173,11 @@ def imc_bitserial_ref(
         xb = x_codes[:, sl]
         wb = w_codes[sl, :]
         gb = None if w_gain is None else w_gain[sl, :]
+        z_bank = None
+        if has_noise:
+            z_bank = bitserial_bank_noise(
+                seed, bank, spec.bw * spec.bx, b_sz, m
+            )
         for i in range(spec.bw):
             wplane = unpack_plane(wb, i, spec.bw, signed=True)
             if gb is not None:
@@ -138,9 +186,9 @@ def imc_bitserial_ref(
                 xplane = unpack_plane(xb, j, spec.bx, signed=spec.x_signed)
                 dp = jnp.dot(xplane, wplane, preferred_element_type=jnp.float32)
                 dp = jnp.minimum(dp, spec.k_h)
-                if noise is not None:
-                    dp = dp + noise[bank, i * spec.bx + j]
-                    dp = jnp.maximum(dp, 0.0)
+                if has_noise:
+                    z = z_bank[i * spec.bx + j]
+                    dp = jnp.maximum(dp + spec.sigma_noise * z, 0.0)
                 if spec.apply_adc:
                     dp = adc_transfer(dp, spec.b_adc, spec.v_c)
                 acc = acc + (ww[i] * xw[j]) * dp
@@ -167,20 +215,25 @@ class AnalyticSpec:
     apply_adc: bool = True
 
 
+def analytic_output_noise(seed, b_sz: int, m: int):
+    """The (B, M) standard-normal draw the analytic kernel generates in its
+    epilogue - same counter sites as the in-kernel fallback PRNG."""
+    b_idx = jnp.arange(b_sz, dtype=jnp.int32)[:, None]
+    m_idx = jnp.arange(m, dtype=jnp.int32)[None, :]
+    return prng.counter_normal(seed, prng.TAG_ANALYTIC, b_idx, m_idx)
+
+
 def imc_analytic_ref(
     x_codes: jax.Array,  # (B, K)
     w_codes: jax.Array,  # (K, M)
-    noise: Optional[jax.Array],  # (B, M) standard normal draws, or None
     spec: AnalyticSpec,
+    seed: Optional[jax.Array] = None,  # scalar int32 noise seed, or None
 ) -> jax.Array:
-    """y_code = ADC_MPC( x_codes @ w_codes + sigma_out * noise )."""
+    """y_code = ADC_MPC( x_codes @ w_codes + sigma_out * N(seed) )."""
     y = jnp.dot(x_codes, w_codes, preferred_element_type=jnp.float32)
-    if noise is not None and spec.sigma_out > 0.0:
-        y = y + spec.sigma_out * noise
+    if seed is not None and spec.sigma_out > 0.0:
+        b_sz, m = y.shape
+        y = y + spec.sigma_out * analytic_output_noise(seed, b_sz, m)
     if spec.apply_adc:
-        c = spec.y_clip
-        delta = 2.0 * c / (2.0**spec.b_adc)
-        code = jnp.clip(jnp.round(y / delta), -(2.0 ** (spec.b_adc - 1)),
-                        2.0 ** (spec.b_adc - 1) - 1)
-        y = code * delta
+        y = mpc_adc(y, spec.b_adc, spec.y_clip)
     return y

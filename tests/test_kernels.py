@@ -1,10 +1,10 @@
-"""Pallas kernel validation: interpret-mode vs the pure-jnp ref oracle, shape
-sweeps, and property tests (deliverable (c))."""
+"""Pallas kernel validation: interpret-mode vs the pure-jnp ref oracle and
+shape sweeps (deliverable (c)).  Hypothesis property sweeps live in
+test_properties.py (skipped wholesale when hypothesis is not installed)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.archs import QSArch
 from repro.kernels import imc_mvm, ops, ref
@@ -40,26 +40,59 @@ def test_bitserial_kernel_matches_ref_no_noise(shape):
     xc, wc = _codes(jax.random.fold_in(KEY, hash(shape) % 2**30), b, k, m, bx, bw, xs)
     spec = BitSerialSpec(bx=bx, bw=bw, b_adc=8, rows=rows, k_h=60.0, v_c=55.0,
                          x_signed=xs)
-    yk = imc_mvm.imc_bitserial_matmul(xc, wc, None, None, spec, interpret=True)
-    yr = ref.imc_bitserial_ref(xc, wc, None, None, spec)
+    yk = imc_mvm.imc_bitserial_matmul(xc, wc, None, spec, interpret=True)
+    yr = ref.imc_bitserial_ref(xc, wc, None, spec)
     np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-6, atol=1e-3)
 
 
 @pytest.mark.parametrize("shape", SHAPES[:3])
-def test_bitserial_kernel_matches_ref_noise_no_adc(shape):
-    """With gain + noise but no ADC the kernel is allclose to the ref (the
-    ADC's round() can flip on float-order knife edges; tested separately)."""
+def test_bitserial_kernel_matches_ref_inkernel_noise_no_adc(shape):
+    """Interpret-mode fallback PRNG: kernel and oracle generate the SAME
+    per-plane noise from the same seed (global-index counters).  Pre-ADC the
+    outputs agree to float tolerance (last-ulp FMA-contraction differences
+    between the two XLA graphs are possible, nothing larger)."""
     b, k, m, rows, bx, bw, xs = shape
     key = jax.random.fold_in(KEY, 1 + hash(shape) % 2**30)
     xc, wc = _codes(key, b, k, m, bx, bw, xs)
-    n_banks = -(-k // rows)
-    k1, k2 = jax.random.split(key)
-    gain = 1.0 + 0.1 * jax.random.normal(k1, (k, m))
-    noise = 0.3 * jax.random.normal(k2, (n_banks, bw * bx, b, m))
     spec = BitSerialSpec(bx=bx, bw=bw, b_adc=8, rows=rows, k_h=60.0, v_c=55.0,
-                         x_signed=xs, apply_adc=False)
-    yk = imc_mvm.imc_bitserial_matmul(xc, wc, gain, noise, spec, interpret=True)
-    yr = ref.imc_bitserial_ref(xc, wc, gain, noise, spec)
+                         x_signed=xs, apply_adc=False, sigma_noise=0.3)
+    yk = imc_mvm.imc_bitserial_matmul(xc, wc, None, spec, seed=4242,
+                                      interpret=True)
+    yr = ref.imc_bitserial_ref(xc, wc, None, spec, seed=4242)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-5,
+                               atol=1e-2)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+def test_bitserial_kernel_matches_ref_inkernel_noise_adc(shape):
+    """With the ADC on, a last-ulp difference can flip one code on rounding
+    knife edges - require identity away from those (< 0.1% of elements)."""
+    b, k, m, rows, bx, bw, xs = shape
+    key = jax.random.fold_in(KEY, 1 + hash(shape) % 2**30)
+    xc, wc = _codes(key, b, k, m, bx, bw, xs)
+    spec = BitSerialSpec(bx=bx, bw=bw, b_adc=8, rows=rows, k_h=60.0, v_c=55.0,
+                         x_signed=xs, sigma_noise=0.3)
+    yk = imc_mvm.imc_bitserial_matmul(xc, wc, None, spec, seed=4242,
+                                      interpret=True)
+    yr = ref.imc_bitserial_ref(xc, wc, None, spec, seed=4242)
+    frac = float(jnp.mean(jnp.abs(yk - yr) > 0))
+    assert frac < 1e-3, frac
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+def test_bitserial_kernel_matches_ref_gain_noise_no_adc(shape):
+    """With gain + in-kernel noise but no ADC the kernel is allclose to the
+    ref (real-valued gain makes plane DPs order-sensitive in f32; the ADC's
+    round() knife edges are tested separately)."""
+    b, k, m, rows, bx, bw, xs = shape
+    key = jax.random.fold_in(KEY, 1 + hash(shape) % 2**30)
+    xc, wc = _codes(key, b, k, m, bx, bw, xs)
+    k1, _ = jax.random.split(key)
+    gain = 1.0 + 0.1 * jax.random.normal(k1, (k, m))
+    spec = BitSerialSpec(bx=bx, bw=bw, b_adc=8, rows=rows, k_h=60.0, v_c=55.0,
+                         x_signed=xs, apply_adc=False, sigma_noise=0.3)
+    yk = imc_mvm.imc_bitserial_matmul(xc, wc, gain, spec, seed=7, interpret=True)
+    yr = ref.imc_bitserial_ref(xc, wc, gain, spec, seed=7)
     np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-4, atol=0.5)
 
 
@@ -73,8 +106,8 @@ def test_bitserial_kernel_adc_boundary_flips_rare():
     gain = 1.0 + 0.1 * jax.random.normal(k1, (k, m))
     spec = BitSerialSpec(bx=bx, bw=bw, b_adc=7, rows=rows, k_h=70.0, v_c=70.0,
                          x_signed=True)
-    yk = imc_mvm.imc_bitserial_matmul(xc, wc, gain, None, spec, interpret=True)
-    yr = ref.imc_bitserial_ref(xc, wc, gain, None, spec)
+    yk = imc_mvm.imc_bitserial_matmul(xc, wc, gain, spec, interpret=True)
+    yr = ref.imc_bitserial_ref(xc, wc, gain, spec)
     frac = float(jnp.mean(jnp.abs(yk - yr) > 1.0))
     assert frac < 0.005, frac
 
@@ -86,27 +119,8 @@ def test_bitserial_wide_open_equals_exact_matmul(shape):
     xc, wc = _codes(jax.random.fold_in(KEY, 2), b, k, m, bx, bw, xs)
     spec = BitSerialSpec(bx=bx, bw=bw, b_adc=16, rows=rows, k_h=1e9, v_c=1e9,
                          x_signed=xs, apply_adc=False)
-    yk = imc_mvm.imc_bitserial_matmul(xc, wc, None, None, spec, interpret=True)
+    yk = imc_mvm.imc_bitserial_matmul(xc, wc, None, spec, interpret=True)
     np.testing.assert_allclose(np.asarray(yk), np.asarray(xc @ wc), rtol=1e-6)
-
-
-@given(
-    b=st.integers(1, 40),
-    k=st.integers(8, 600),
-    m=st.integers(1, 90),
-    bx=st.integers(2, 8),
-    bw=st.integers(2, 8),
-    xs=st.booleans(),
-)
-@settings(max_examples=12, deadline=None)
-def test_bitserial_ref_wide_open_property(b, k, m, bx, bw, xs):
-    """Hypothesis sweep of the oracle itself: exactness invariant."""
-    key = jax.random.PRNGKey(b * 1000 + k + m)
-    xc, wc = _codes(key, b, k, m, bx, bw, xs)
-    spec = BitSerialSpec(bx=bx, bw=bw, b_adc=16, rows=min(512, k), k_h=1e9,
-                         v_c=1e9, x_signed=xs, apply_adc=False)
-    yr = ref.imc_bitserial_ref(xc, wc, None, None, spec)
-    np.testing.assert_allclose(np.asarray(yr), np.asarray(xc @ wc), rtol=1e-6)
 
 
 def test_more_adc_bits_less_error():
@@ -117,23 +131,23 @@ def test_more_adc_bits_less_error():
     for b_adc in (4, 6, 8, 10):
         spec = BitSerialSpec(bx=6, bw=6, b_adc=b_adc, rows=512, k_h=1e9,
                              v_c=140.0, x_signed=True)
-        y = np.asarray(ref.imc_bitserial_ref(xc, wc, None, None, spec))
+        y = np.asarray(ref.imc_bitserial_ref(xc, wc, None, spec))
         errs.append(np.sqrt(np.mean((y - exact) ** 2)))
     assert errs[0] > errs[1] > errs[2] > errs[3]
 
 
 @pytest.mark.parametrize("shape", [(8, 1024, 64), (130, 700, 257), (1, 64, 1)])
 def test_analytic_kernel_matches_ref(shape):
+    """In-kernel epilogue noise from the same seed -> bit-exact vs oracle."""
     b, k, m = shape
     key = jax.random.fold_in(KEY, 4)
-    k1, k2, k3 = jax.random.split(key, 3)
+    k1, k2 = jax.random.split(key)
     xc = jnp.round(jax.random.normal(k1, (b, k)) * 10)
     wc = jnp.round(jax.random.normal(k2, (k, m)) * 10)
-    noise = jax.random.normal(k3, (b, m))
     sig = float(jnp.std(xc @ wc)) + 1e-6
     spec = AnalyticSpec(b_adc=8, sigma_out=0.05, y_clip=4.0)
-    yk = imc_mvm.imc_analytic_matmul(xc / sig, wc, noise, spec, interpret=True)
-    yr = ref.imc_analytic_ref(xc / sig, wc, noise, spec)
+    yk = imc_mvm.imc_analytic_matmul(xc / sig, wc, spec, seed=99, interpret=True)
+    yr = ref.imc_analytic_ref(xc / sig, wc, spec, seed=99)
     # K-padding changes f32 accumulation order -> the ADC round() can flip by
     # one step on knife edges; require exactness elsewhere
     d = np.abs(np.asarray(yk) - np.asarray(yr))

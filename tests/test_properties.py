@@ -1,0 +1,104 @@
+"""Hypothesis property sweeps for the quantizer and the bit-serial oracle.
+
+Kept in their own module, guarded with ``pytest.importorskip``: the tier-1
+suite collects and passes without hypothesis installed (this file skips
+wholesale), and the property tests run whenever the ``dev`` extra is present.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (
+    QuantSpec,
+    bit_planes,
+    combine_bit_planes,
+    fakequant,
+)
+from repro.kernels import ref
+from repro.kernels.ref import BitSerialSpec, quantize_codes
+
+
+# ---------------------------------------------------------------------------
+# quantizer invariants (from test_quant.py)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    bits=st.integers(2, 10),
+    signed=st.booleans(),
+    max_val=st.floats(0.1, 100.0),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=30, deadline=None)
+def test_quantizer_error_bounded(bits, signed, max_val, seed):
+    spec = QuantSpec(bits, signed, max_val)
+    rng = np.random.default_rng(seed)
+    lo = -max_val if signed else 0.0
+    x = rng.uniform(lo, max_val, size=(256,))
+    xq = np.asarray(fakequant(jnp.asarray(x), spec))
+    # in-range values: error <= Delta/2 (+ Delta at the top clip edge)
+    assert np.all(np.abs(xq - x) <= spec.delta * 1.001 + 1e-7)
+
+
+@given(bits=st.integers(2, 10), signed=st.booleans(), seed=st.integers(0, 2**16))
+@settings(max_examples=30, deadline=None)
+def test_quantize_idempotent(bits, signed, seed):
+    spec = QuantSpec(bits, signed, 1.0)
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1 if signed else 0, 1, size=(128,))
+    once = fakequant(jnp.asarray(x), spec)
+    twice = fakequant(once, spec)
+    assert np.allclose(np.asarray(once), np.asarray(twice))
+
+
+@given(bits=st.integers(2, 9), signed=st.booleans(), seed=st.integers(0, 2**16))
+@settings(max_examples=30, deadline=None)
+def test_bit_plane_roundtrip(bits, signed, seed):
+    rng = np.random.default_rng(seed)
+    lo = -(2 ** (bits - 1)) if signed else 0
+    hi = (2 ** (bits - 1)) if signed else 2**bits
+    codes = jnp.asarray(rng.integers(lo, hi, size=(64,)), jnp.float32)
+    planes, weights = bit_planes(codes, bits, signed)
+    assert np.all((np.asarray(planes) == 0) | (np.asarray(planes) == 1))
+    rec = combine_bit_planes(planes, weights)
+    assert np.allclose(np.asarray(rec), np.asarray(codes))
+
+
+# ---------------------------------------------------------------------------
+# bit-serial oracle invariant (from test_kernels.py)
+# ---------------------------------------------------------------------------
+
+
+def _codes(key, b, k, m, bx, bw, x_signed):
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (b, k))
+    if not x_signed:
+        x = jnp.abs(x)
+    w = jax.random.normal(k2, (k, m))
+    xc, _ = quantize_codes(x, bx, x_signed, jnp.max(jnp.abs(x)))
+    wc, _ = quantize_codes(w, bw, True, jnp.max(jnp.abs(w)))
+    return xc, wc
+
+
+@given(
+    b=st.integers(1, 40),
+    k=st.integers(8, 600),
+    m=st.integers(1, 90),
+    bx=st.integers(2, 8),
+    bw=st.integers(2, 8),
+    xs=st.booleans(),
+)
+@settings(max_examples=12, deadline=None)
+def test_bitserial_ref_wide_open_property(b, k, m, bx, bw, xs):
+    """Hypothesis sweep of the oracle itself: exactness invariant."""
+    key = jax.random.PRNGKey(b * 1000 + k + m)
+    xc, wc = _codes(key, b, k, m, bx, bw, xs)
+    spec = BitSerialSpec(bx=bx, bw=bw, b_adc=16, rows=min(512, k), k_h=1e9,
+                         v_c=1e9, x_signed=xs, apply_adc=False)
+    yr = ref.imc_bitserial_ref(xc, wc, None, spec)
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(xc @ wc), rtol=1e-6)

@@ -1,17 +1,14 @@
-"""Quantizer + SQNR fundamentals (paper SSII), incl. hypothesis property tests."""
+"""Quantizer + SQNR fundamentals (paper SSII).  The hypothesis property
+sweeps live in test_properties.py, guarded by pytest.importorskip."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import quant
 from repro.core.quant import (
     QuantSpec,
     SignalStats,
     UNIFORM_STATS,
-    bit_planes,
-    combine_bit_planes,
     db,
     dequantize,
     fakequant,
@@ -19,52 +16,6 @@ from repro.core.quant import (
     sqnr_qiy,
     sqnr_qiy_db_approx,
 )
-
-
-# ---------------------------------------------------------------------------
-# quantizer invariants (property-based)
-# ---------------------------------------------------------------------------
-
-
-@given(
-    bits=st.integers(2, 10),
-    signed=st.booleans(),
-    max_val=st.floats(0.1, 100.0),
-    seed=st.integers(0, 2**16),
-)
-@settings(max_examples=30, deadline=None)
-def test_quantizer_error_bounded(bits, signed, max_val, seed):
-    spec = QuantSpec(bits, signed, max_val)
-    rng = np.random.default_rng(seed)
-    lo = -max_val if signed else 0.0
-    x = rng.uniform(lo, max_val, size=(256,))
-    xq = np.asarray(fakequant(jnp.asarray(x), spec))
-    # in-range values: error <= Delta/2 (+ Delta at the top clip edge)
-    assert np.all(np.abs(xq - x) <= spec.delta * 1.001 + 1e-7)
-
-
-@given(bits=st.integers(2, 10), signed=st.booleans(), seed=st.integers(0, 2**16))
-@settings(max_examples=30, deadline=None)
-def test_quantize_idempotent(bits, signed, seed):
-    spec = QuantSpec(bits, signed, 1.0)
-    rng = np.random.default_rng(seed)
-    x = rng.uniform(-1 if signed else 0, 1, size=(128,))
-    once = fakequant(jnp.asarray(x), spec)
-    twice = fakequant(once, spec)
-    assert np.allclose(np.asarray(once), np.asarray(twice))
-
-
-@given(bits=st.integers(2, 9), signed=st.booleans(), seed=st.integers(0, 2**16))
-@settings(max_examples=30, deadline=None)
-def test_bit_plane_roundtrip(bits, signed, seed):
-    rng = np.random.default_rng(seed)
-    lo = -(2 ** (bits - 1)) if signed else 0
-    hi = (2 ** (bits - 1)) if signed else 2**bits
-    codes = jnp.asarray(rng.integers(lo, hi, size=(64,)), jnp.float32)
-    planes, weights = bit_planes(codes, bits, signed)
-    assert np.all((np.asarray(planes) == 0) | (np.asarray(planes) == 1))
-    rec = combine_bit_planes(planes, weights)
-    assert np.allclose(np.asarray(rec), np.asarray(codes))
 
 
 # ---------------------------------------------------------------------------
