@@ -29,7 +29,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig9,fig10,fig11,fig12,fig13,"
-                         "pareto,layer_snr,model_energy,kernel,roofline")
+                         "pareto,layer_snr,model_energy,kernel,serve,"
+                         "roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write a machine-readable JSON report")
     args = ap.parse_args()
@@ -40,7 +41,8 @@ def main() -> None:
 
     import jax
 
-    from benchmarks import kernel_bench, layer_snr, model_energy, roofline
+    from benchmarks import (kernel_bench, layer_snr, model_energy, roofline,
+                            serve_bench)
     from benchmarks.paper_figures import ALL as FIG_BENCHES
 
     suites = {}
@@ -48,10 +50,13 @@ def main() -> None:
     suites["layer_snr"] = layer_snr.run
     suites["model_energy"] = model_energy.run
     suites["kernel"] = kernel_bench.run
+    suites["serve"] = serve_bench.run
     suites["roofline"] = roofline.run
     # suites with structured records: run once, derive the CSV rows from them
     record_fns = {"kernel": (kernel_bench.bench_records,
-                             kernel_bench.rows_from_records)}
+                             kernel_bench.rows_from_records),
+                  "serve": (serve_bench.bench_records,
+                            serve_bench.rows_from_records)}
 
     only = set(args.only.split(",")) if args.only else None
     payload = {

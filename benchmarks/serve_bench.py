@@ -1,0 +1,298 @@
+"""Serving micro-bench: tok/s, time-to-first-token and host-transfer traffic
+for the continuous-batching engine vs a FROZEN copy of the seed wave server.
+
+The frozen ``WaveServer`` below preserves the pre-rewrite serving design (kept
+ONLY as the perf reference): one decode step per Python tick with a host sync
+(`np.array` of the argmax) every token, a host-side `tree_map` loop scattering
+each prefill cache into its slot, and a single scalar cache position that
+forces equal-prompt-length admission waves.  The engine
+(`repro.launch.serve.Engine`) replaces all three: per-slot position vectors,
+a fused `lax.scan` decode chunk (one (slots, T) int32 host transfer per
+chunk), and bucketed prefill with a jitted slot insert.
+
+Structural counters reported per configuration:
+
+  sync_bytes_per_token   int32 token traffic actually copied to the host,
+                         amortized per generated token
+  jit_out_bytes_per_tick bytes leaving the jitted decode computation per tick
+                         (wave: the full (slots, 1, vocab) f32 logits cross
+                         the jit boundary every token; engine: logits never
+                         leave the scan - only the (slots, T) token block)
+  host_syncs_per_token   blocking device->host round trips per token
+
+CPU wall times are indicative; the structural counters transfer to TPU.
+``bench_records()`` returns machine-readable dicts (consumed by
+``benchmarks/run.py --json``); ``run()`` formats them as CSV rows.  The
+committed ``BENCH_serve.json`` baseline is produced with::
+
+    PYTHONPATH=src python benchmarks/run.py --only serve --json BENCH_serve.json
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch.serve import Engine, Request, serve
+from repro.models import decode_step, init_cache, init_params, prefill
+
+Row = Tuple[str, float, str]
+
+ARCH = "musicgen-medium"
+BATCH = 4
+REQUESTS = 8
+PROMPT_LEN = 12
+GEN = 8
+# measured request count per mode (bitserial is ~30x slower per token on the
+# CPU reference path; fewer requests keep the suite inside the CI budget)
+MODES = {None: REQUESTS, "imc_analytic": REQUESTS, "imc_bitserial": 4}
+WARMUP_REQUESTS = 2  # enough to compile prefill bucket + all chunk sizes
+
+
+# ---------------------------------------------------------------------------
+# frozen seed wave server (pre-rewrite design, perf reference only)
+# ---------------------------------------------------------------------------
+
+
+class WaveServer:
+    """Fixed-slot wave server: scalar cache position (slots stay
+    position-synchronized), per-tick host sync, host-side cache scatter."""
+
+    def __init__(self, cfg, params, batch_slots: int, cache_len: int,
+                 rng: Optional[jax.Array] = None):
+        self.cfg = cfg
+        self.params = params
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.cache = init_cache(cfg, batch_slots, cache_len)
+        self.cache_len = cache_len
+        self.slot_pos = np.zeros(batch_slots, np.int32)
+        self.last_token = np.zeros(batch_slots, np.int32)
+        self.rng = rng
+        self.ticks = 0
+        self.sync_bytes = 0
+        self._decode = jax.jit(
+            lambda p, t, c, key: decode_step(p, cfg, t, c, rng=key)
+        )
+
+    def admit(self, req: Request) -> bool:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                if req.t_submit is None:
+                    req.t_submit = time.perf_counter()
+                self.slots[i] = req
+                self._prefill_slot(i, req)
+                return True
+        return False
+
+    def _prefill_slot(self, i: int, req: Request):
+        toks = jnp.asarray(req.prompt)[None, :]
+        logits, cache1 = prefill(self.params, self.cfg, toks,
+                                 cache_len=self.cache_len, rng=self.rng)
+
+        # scatter the single-request cache into slot i of the batched cache
+        def put(batched, single):
+            if batched.ndim == 0 or batched.shape == single.shape == ():
+                return batched
+            for axis in range(batched.ndim):
+                if (batched.shape[axis] == len(self.slots)
+                        and single.shape[axis] == 1):
+                    idx = [slice(None)] * batched.ndim
+                    idx[axis] = i
+                    sidx = [slice(None)] * single.ndim
+                    sidx[axis] = 0
+                    return batched.at[tuple(idx)].set(single[tuple(sidx)])
+            return batched
+
+        self.cache = jax.tree_util.tree_map(
+            lambda b, s: put(b, s) if hasattr(b, "at") else b,
+            {k: v for k, v in self.cache.items() if k != "pos"},
+            {k: v for k, v in cache1.items() if k != "pos"},
+        )
+        self.cache["pos"] = jnp.asarray(int(cache1["pos"]), jnp.int32)
+        self.slot_pos[i] = len(req.prompt)
+        self.last_token[i] = int(jnp.argmax(logits[0, -1]))
+        req.out.append(int(self.last_token[i]))
+        req.t_first = time.perf_counter()
+
+    def tick(self):
+        toks = jnp.asarray(self.last_token)
+        key = None
+        if self.rng is not None:
+            self.rng, key = jax.random.split(self.rng)
+        logits, self.cache = self._decode(self.params, toks, self.cache, key)
+        # np.array (copy): the per-token host sync the engine eliminates
+        nxt = np.array(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        self.ticks += 1
+        self.sync_bytes += nxt.nbytes
+        for i, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            req.out.append(int(nxt[i]))
+            self.slot_pos[i] += 1
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.slots[i] = None
+        self.last_token = nxt
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+
+def _serve_wave(server: WaveServer, requests: List[Request]) -> List[Request]:
+    pending = list(requests)
+    finished: List[Request] = []
+    while pending or server.active:
+        while pending and server.admit(pending[0]):
+            pending.pop(0)
+        before = [s for s in server.slots if s is not None]
+        server.tick()
+        finished.extend(r for r in before if r.done)
+    return finished
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+
+def _mk_cfg(mode: Optional[str]):
+    cfg = configs.get_smoke(ARCH)
+    if mode:
+        from repro.core.imc_linear import IMCConfig
+
+        cfg = cfg.replace(imc=IMCConfig(mode=mode, bx=7, bw=7, v_wl=0.7))
+    return cfg
+
+
+def _mk_requests(cfg, lens, n_requests) -> List[Request]:
+    rnp = np.random.default_rng(0)
+    return [
+        Request(rid=i, prompt=rnp.integers(0, cfg.vocab_size, lens[i % len(lens)]),
+                max_new=GEN)
+        for i in range(n_requests)
+    ]
+
+
+def _ttft_ms(reqs) -> float:
+    vals = [r.ttft for r in reqs if r.ttft is not None]
+    return 1e3 * float(np.mean(vals)) if vals else float("nan")
+
+
+def _run_wave(cfg, rng, cache_len, n_requests):
+    server = WaveServer(cfg, init_params(jax.random.PRNGKey(0), cfg),
+                        BATCH, cache_len, rng=rng)
+    reqs = _mk_requests(cfg, [PROMPT_LEN], n_requests)
+    t0 = time.perf_counter()
+    out = _serve_wave(server, reqs)
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out) for r in out)
+    return {
+        "wall_s": round(dt, 3),
+        "tok_s": round(tokens / dt, 1) if dt > 0 else float("nan"),
+        "ttft_ms": round(_ttft_ms(out), 1),
+        "tokens": tokens,
+        "host_syncs_per_token": 1.0,
+        "sync_bytes_per_token": round(server.sync_bytes / max(tokens, 1), 1),
+        # the (slots, 1, vocab) f32 logits leave the jitted step every tick
+        "jit_out_bytes_per_tick": BATCH * cfg.padded_vocab * 4,
+    }
+
+
+def _run_engine(cfg, rng, cache_len, lens, n_requests):
+    engine = Engine(cfg, init_params(jax.random.PRNGKey(0), cfg),
+                    BATCH, cache_len, rng=rng, max_chunk=GEN)
+    reqs = _mk_requests(cfg, lens, n_requests)
+    t0 = time.perf_counter()
+    out = serve(engine, reqs)
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out) for r in out)
+    steps = max(engine.decode_steps, 1)
+    return {
+        "wall_s": round(dt, 3),
+        "tok_s": round(tokens / dt, 1) if dt > 0 else float("nan"),
+        "ttft_ms": round(_ttft_ms(out), 1),
+        "tokens": tokens,
+        "host_syncs_per_token": round(engine.decode_calls / steps, 3),
+        "sync_bytes_per_token": round(
+            engine.host_transfer_bytes / max(tokens, 1), 1),
+        # only the (slots, T) int32 token block leaves the fused scan
+        "jit_out_bytes_per_tick": round(
+            engine.host_transfer_bytes / max(engine.decode_steps, 1), 1),
+        "decode_chunks": engine.decode_calls,
+        "decode_steps": engine.decode_steps,
+    }
+
+
+def bench_records() -> List[dict]:
+    records: List[dict] = []
+    cache_len = 2 * PROMPT_LEN + GEN + 8  # covers the pow2 bucket (16)
+    for mode, n_requests in MODES.items():
+        cfg = _mk_cfg(mode)
+        rng = jax.random.PRNGKey(7) if mode else None
+        meta = {"bench": "serve", "arch": ARCH, "mode": mode or "digital",
+                "slots": BATCH, "requests": n_requests,
+                "prompt_len": PROMPT_LEN, "gen": GEN}
+        # warmup both paths (compile time excluded, as in kernel_bench)
+        _run_wave(cfg, rng, cache_len, WARMUP_REQUESTS)
+        _run_engine(cfg, rng, cache_len, [PROMPT_LEN], WARMUP_REQUESTS)
+        wave = _run_wave(cfg, rng, cache_len, n_requests)
+        eng = _run_engine(cfg, rng, cache_len, [PROMPT_LEN], n_requests)
+        records.append({**meta, "config": "wave_baseline", **wave})
+        records.append({**meta, "config": "engine", **eng})
+        records.append({
+            **meta, "bench": "serve_summary",
+            "speedup_tok_s": round(eng["tok_s"] / wave["tok_s"], 2)
+            if wave["tok_s"] else float("nan"),
+            "ttft_ratio": round(eng["ttft_ms"] / wave["ttft_ms"], 2)
+            if wave["ttft_ms"] else float("nan"),
+            "jit_out_bytes_per_tick_before": wave["jit_out_bytes_per_tick"],
+            "jit_out_bytes_per_tick_after": eng["jit_out_bytes_per_tick"],
+            "host_syncs_per_token_before": wave["host_syncs_per_token"],
+            "host_syncs_per_token_after": eng["host_syncs_per_token"],
+        })
+    # unequal prompt lengths in one batch: the wave server cannot run this
+    # shape at all (scalar cache position => admission waves)
+    cfg = _mk_cfg(None)
+    lens = [5, 9, 12, 17]
+    cache_len = 32 + GEN + 8
+    _run_engine(cfg, None, cache_len, lens, len(lens))  # warm every bucket
+    eng = _run_engine(cfg, None, cache_len, lens, REQUESTS)
+    records.append({"bench": "serve", "arch": ARCH, "mode": "digital",
+                    "config": "engine_unequal_prompts", "slots": BATCH,
+                    "requests": REQUESTS, "prompt_lens": lens, "gen": GEN,
+                    **eng})
+    return records
+
+
+def rows_from_records(records: List[dict]) -> List[Row]:
+    rows: List[Row] = []
+    for r in records:
+        tag = f"{r['mode']}_b{r['slots']}"
+        if r["bench"] == "serve_summary":
+            rows.append((
+                f"serve/summary_{tag}",
+                r["speedup_tok_s"],
+                f"tok/s speedup; jit_out_B/tick "
+                f"{r['jit_out_bytes_per_tick_before']}->"
+                f"{r['jit_out_bytes_per_tick_after']} "
+                f"syncs/tok {r['host_syncs_per_token_before']}->"
+                f"{r['host_syncs_per_token_after']}",
+            ))
+        else:
+            rows.append((
+                f"serve/{r['config']}_{tag}",
+                r["tok_s"],
+                f"tok/s; ttft={r['ttft_ms']}ms "
+                f"sync_B/tok={r['sync_bytes_per_token']} "
+                f"jit_out_B/tick={r['jit_out_bytes_per_tick']}",
+            ))
+    return rows
+
+
+def run() -> List[Row]:
+    return rows_from_records(bench_records())

@@ -17,15 +17,17 @@ are preferred at low compute SNR, QR-based at high compute SNR" (tests assert it
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Iterable, Optional
 
 import numpy as np
 
 from repro.core import precision as prec
-from repro.core.archs import CMArch, IMCArch, QRArch, QSArch
+from repro.core.archs import (CMArch, IMCArch, QRArch, QSArch,
+                              binomial_clip_second_moment, sigma_qiy_sq)
 from repro.core.compute_models import TechParams, TECH_65NM
-from repro.core.quant import SignalStats, UNIFORM_STATS
+from repro.core.quant import QuantSpec, SignalStats, UNIFORM_STATS
 from repro.core import snr as snr_lib
 
 V_WL_GRID = tuple(np.round(np.arange(0.50, 0.86, 0.025), 3))
@@ -136,6 +138,172 @@ def evaluate_point(
     )
 
 
+# ---------------------------------------------------------------------------
+# vectorized grid evaluation: all (knob, n_banks) points per kind in one
+# numpy batch (same Table III math as evaluate_point; verified by tests)
+# ---------------------------------------------------------------------------
+
+_v_clip_stats = np.vectorize(prec.gaussian_clip_stats, otypes=[float, float])
+_v_binom2 = np.vectorize(
+    lambda nn, kk: binomial_clip_second_moment(int(nn), float(kk)),
+    otypes=[float],
+)
+
+
+def _db_arr(x):
+    return 10.0 * np.log10(np.maximum(x, 1e-300))
+
+
+@functools.lru_cache(maxsize=256)
+def _grid_metrics(kind: str, n: int, bx: int, bw: int, stats: SignalStats,
+                  tech: TechParams, max_rows: int, gamma_db: float):
+    """Table III metrics over the full (knob x n_banks) grid, as numpy arrays
+    of shape (len(knobs), len(BANK_SPLITS)).  Row-major flat order matches the
+    legacy scalar loop (knob outer, banking inner), so argmin tie-breaking is
+    unchanged.  Cached: pareto_sweep re-uses the batch across SNR targets."""
+    knobs = np.asarray(C_O_GRID if kind == "qr" else V_WL_GRID)[:, None]
+    banks = np.asarray(BANK_SPLITS)[None, :]
+    n_bank = np.ceil(n / banks).astype(int)
+    valid = (n_bank <= max_rows) & (n_bank >= 2)
+    n_bank = np.maximum(n_bank, 2)  # placeholder rows stay masked via `valid`
+
+    dx = QuantSpec(bx, signed=False, max_val=stats.x_max).delta
+    dw = QuantSpec(bw, signed=True, max_val=stats.w_max).delta
+    sigma_yo_sq = n_bank * stats.var_w * stats.e_x2
+    sigma_qiy = n_bank * sigma_qiy_sq(1, bx, bw, stats)  # linear in N
+
+    if kind == "qs" or kind == "cm":
+        t_pulse = tech.t0 if kind == "cm" else tech.t_pulse
+        ov = np.maximum(knobs - tech.v_t, 1e-9)
+        cell_i = tech.w_over_l * tech.k_prime * ov**tech.alpha
+        sigma_d = tech.alpha * tech.sigma_vt / ov
+        t_rf = tech.t_rise - ((knobs - tech.v_t) / knobs) * (
+            (tech.t_rise + tech.t_fall) / (tech.alpha + 1.0)
+        )
+        t_eff = np.maximum(t_pulse - t_rf, 1e-12)
+        dv_unit = cell_i * t_eff / tech.c_bl
+        k_h = tech.dv_bl_max / dv_unit
+
+    if kind == "qs":
+        pws = (4.0 / 9.0) * (1 - 4.0**-bw) * (1 - 4.0**-bx)
+        eta_h = pws * _v_binom2(n_bank + 0 * k_h, k_h + 0.0 * n_bank)
+        eta_e = pws * n_bank * sigma_d**2 / 4.0
+        v_c_counts = np.minimum(
+            np.minimum(n_bank / 4.0 + np.sqrt(3.0 * n_bank), k_h), n_bank
+        )
+        v_c_norm = v_c_counts * dx * dw * (2.0**bx - 1) * (2.0**bw - 1) / 4.0
+        adc_ratio = tech.v_dd / np.maximum(v_c_counts * dv_unit, 1e-6)
+        conversions = bx * bw
+        analog = bx * bw * (
+            np.minimum(n_bank / 4.0, k_h) * dv_unit * tech.v_dd * tech.c_bl
+            + n_bank * tech.e_switch
+        )
+    elif kind == "qr":
+        c_o = knobs
+        sigma_c_rel = tech.pelgrom_kappa / np.sqrt(c_o)
+        sigma_th = np.sqrt(1.380649e-23 * tech.temp / c_o)
+        sigma_inj_sq = (tech.inj_p * tech.wl_cox / c_o) ** 2
+        per_cell = (
+            stats.e_x2 * sigma_c_rel**2
+            + 2.0 * (sigma_th / tech.v_dd) ** 2
+            + sigma_inj_sq * stats.var_x
+        )
+        eta_h = np.zeros_like(per_cell + 0.0 * n_bank)
+        eta_e = (2.0 / 3.0) * (1 - 4.0**-bw) * n_bank * per_cell
+        v_c_volts = (
+            2.0 * tech.v_dd
+            * np.sqrt((stats.e_x2 + stats.var_x) / (stats.x_max**2 * n_bank))
+        ) + 0.0 * c_o
+        v_c_norm = 4.0 * np.sqrt(sigma_yo_sq) + 0.0 * c_o
+        adc_ratio = tech.v_dd / np.maximum(v_c_volts, 1e-6)
+        conversions = bw
+        e_qr = n_bank * ((1.0 - stats.mu_x) * tech.v_dd) * tech.v_dd * c_o \
+            + n_bank * tech.e_switch
+        e_mult = stats.mu_x * 0.5 * c_o * tech.v_dd**2
+        analog = bw * (e_qr + n_bank * e_mult)
+    elif kind == "cm":
+        t = np.maximum(1.0 - 2.0 * k_h * 2.0**-bw, 0.0)
+        eta_h = (
+            (1.0 / 12.0) * n_bank * stats.e_x2 * stats.var_w
+            * k_h**-2 * 2.0 ** (2 * bw) * t * t
+        )
+        eta_e = (
+            (2.0 / 3.0) * n_bank * stats.e_x2
+            * (0.25 - 4.0**-bw) * sigma_d**2
+        )
+        sigma_y = np.sqrt(n_bank * stats.var_w * stats.e_x2)
+        v_c_volts = 4.0 * 2.0 ** (bw - 1) * dv_unit * sigma_y / n_bank
+        v_c_norm = 4.0 * np.sqrt(sigma_yo_sq) + 0.0 * k_h
+        adc_ratio = tech.v_dd / np.maximum(v_c_volts, 1e-6)
+        conversions = 1
+        mean_counts = np.minimum(0.5 * (2.0**bw - 1), k_h * 2)
+        mean_v = np.minimum(mean_counts * dv_unit, tech.dv_bl_max)
+        e_qs_col = mean_v * tech.v_dd * tech.c_bl / n_bank + tech.e_switch
+        qr_co = 3e-15
+        e_qr = n_bank * ((1.0 - stats.mu_x) * tech.v_dd) * tech.v_dd * qr_co \
+            + n_bank * tech.e_switch
+        e_mult = stats.mu_x * 0.5 * qr_co * tech.v_dd**2
+        analog = 2 * n_bank * e_qs_col + e_qr + n_bank * e_mult
+    else:
+        raise ValueError(kind)
+
+    # -- SNR composition (eqs. 10, 11, 14, 15) --
+    snr_a = sigma_yo_sq / np.maximum(eta_h + eta_e, 1e-300)
+    snr_a_db = _db_arr(snr_a)
+    snr_A = 1.0 / (1.0 / snr_a + sigma_qiy / sigma_yo_sq)
+    snr_A_db = _db_arr(snr_A)
+    mpc = np.ceil(
+        (snr_A_db + 7.2 - gamma_db
+         - 10.0 * math.log10(1.0 - 10.0 ** (-gamma_db / 10.0))) / 6.0
+    )
+    if kind == "qs":
+        b_adc = np.ceil(np.minimum(
+            np.minimum(mpc, np.log2(np.maximum(k_h, 2.0)) + 0.0 * n_bank),
+            np.log2(n_bank),
+        )).astype(int)
+    elif kind == "qr":
+        b_adc = np.ceil(np.minimum(mpc, bx + np.log2(n_bank))).astype(int)
+    else:
+        b_adc = mpc.astype(int)
+
+    zeta = v_c_norm / np.maximum(np.sqrt(sigma_yo_sq), 1e-300)
+    q_var = (2.0 * v_c_norm * 2.0**-b_adc.astype(float)) ** 2 / 12.0
+    p_c, scc = _v_clip_stats(zeta)
+    sigma_qy = q_var + p_c * scc * sigma_yo_sq
+    snr_t = 1.0 / (1.0 / snr_A + sigma_qy / sigma_yo_sq)
+    snr_t_db = _db_arr(snr_t)
+
+    # -- energy & delay (eqs. 21, 25, 26 + banked composition) --
+    r = np.maximum(adc_ratio, 1.0)
+    e_adc = 100e-15 * (b_adc + np.log2(r)) + 1e-18 * r * r * 4.0**b_adc
+    e_bank = analog + conversions * e_adc \
+        + conversions * b_adc * tech.e_add_per_bit
+    width = b_adc + np.ceil(np.log2(np.maximum(banks, 2))).astype(int)
+    energy = banks * e_bank \
+        + np.maximum(banks - 1, 0) * width * tech.e_add_per_bit
+    if kind == "qs":
+        delay_bank = bx * (tech.t_pulse + tech.t_setup
+                           + b_adc * tech.t_adc_per_bit)
+    elif kind == "qr":
+        delay_bank = 2 * tech.t0 + tech.t_setup + b_adc * tech.t_adc_per_bit
+    else:
+        delay_bank = (2.0 ** (bw - 1) * tech.t0 + tech.t_setup
+                      + 2 * tech.t0 + tech.t_setup
+                      + b_adc * tech.t_adc_per_bit)
+    delay = delay_bank + np.ceil(np.log2(np.maximum(banks, 1))) * 1e-10
+    energy = np.broadcast_to(energy + 0.0 * snr_t_db, snr_t_db.shape)
+    delay = np.broadcast_to(delay + 0.0 * snr_t_db, snr_t_db.shape)
+    return {
+        "knobs": np.asarray(C_O_GRID if kind == "qr" else V_WL_GRID),
+        "banks": np.asarray(BANK_SPLITS),
+        "valid": np.broadcast_to(valid, snr_t_db.shape),
+        "snr_t_db": snr_t_db,
+        "energy": energy,
+        "delay": delay,
+        "edp": energy * delay,
+    }
+
+
 def optimize(
     n: int,
     snr_t_target_db: float,
@@ -147,36 +315,48 @@ def optimize(
     objective: str = "energy",  # "energy" | "edp" | "delay"
     max_rows: int = 512,
 ) -> Optional[DesignPoint]:
-    """Exhaustive grid search over (kind x knob x banking), min-objective subject
-    to SNR_T >= target.  B_x/B_w default to the SSIII-B assignment for the target."""
+    """Grid search over (kind x knob x banking), min-objective subject to
+    SNR_T >= target.  B_x/B_w default to the SSIII-B assignment for the target.
+
+    The whole (knob, n_banks) grid per kind is evaluated as one vectorized
+    numpy batch (:func:`_grid_metrics`); only the winning cell goes through
+    the scalar :func:`evaluate_point` to build the exact DesignPoint."""
     if bx is None or bw is None:
         pa = prec.assign_precisions(snr_t_target_db + 3.0, n, stats)
         bx = bx or pa.bx
         bw = bw or pa.bw
 
+    obj_key = {"energy": "energy", "edp": "edp", "delay": "delay"}[objective]
     best: Optional[DesignPoint] = None
     for kind in kinds:
-        knobs = C_O_GRID if kind == "qr" else V_WL_GRID
-        for knob in knobs:
-            for n_banks in BANK_SPLITS:
-                pt = evaluate_point(
-                    kind, n, n_banks, bx, bw, stats, tech, knob,
-                    snr_t_target_db, max_rows=max_rows,
-                )
-                if pt is None:
-                    continue
-                key = {
-                    "energy": pt.energy_per_dp,
-                    "edp": pt.edp,
-                    "delay": pt.delay_per_dp,
-                }[objective]
+        g = _grid_metrics(kind, n, bx, bw, stats, tech, max_rows, 0.5)
+        feasible = (
+            g["valid"]
+            & np.isfinite(g["snr_t_db"])
+            & (g["snr_t_db"] >= snr_t_target_db)
+        )
+        if not feasible.any():
+            continue
+        obj = np.where(feasible, g[obj_key], np.inf)
+        # ascending objective; stable sort keeps the legacy scalar-loop
+        # tie-break (knob outer, banking inner, first strict improvement)
+        for flat in np.argsort(obj, axis=None, kind="stable"):
+            if not feasible.flat[flat]:
+                break
+            ki, bi = np.unravel_index(flat, obj.shape)
+            pt = evaluate_point(
+                kind, n, int(g["banks"][bi]), bx, bw, stats, tech,
+                float(g["knobs"][ki]), snr_t_target_db, max_rows=max_rows,
+            )
+            if pt is not None:
+                key = {"energy": pt.energy_per_dp, "edp": pt.edp,
+                       "delay": pt.delay_per_dp}[objective]
                 best_key = None if best is None else {
-                    "energy": best.energy_per_dp,
-                    "edp": best.edp,
-                    "delay": best.delay_per_dp,
-                }[objective]
+                    "energy": best.energy_per_dp, "edp": best.edp,
+                    "delay": best.delay_per_dp}[objective]
                 if best is None or key < best_key:
                     best = pt
+                break
     return best
 
 

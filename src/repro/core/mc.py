@@ -4,8 +4,10 @@ Fig. 8): the 'S' curves that validate the Table III 'E' expressions.
 Each simulator draws an ensemble of circuit instances (spatial mismatch is fixed
 per instance, temporal noise redrawn per evaluation), pushes real operand vectors
 through the *physical* signal chain of eqs. (17) / (23) - including the
-nonlinear clipping and the ADC - and returns the reconstructed DP outputs, from
-which empirical SNRs are computed.
+nonlinear clipping and the ADC - and returns BOTH the post-ADC and the pre-ADC
+reconstructed DP outputs from the SAME analog pass (same noise draws): one
+simulation yields the full-chain SNR_T and the chain-without-ADC SNR_A, so MC
+validation runs each circuit once instead of twice.
 
 Everything is jax.vmap-vectorized over ensemble instances and jit-compatible.
 """
@@ -48,9 +50,9 @@ def mc_qs_arch(
     w: jax.Array,  # (ens, N) signed in [-w_max, w_max]
     arch: QSArch,
     b_adc: Optional[int] = None,
-    include_adc: bool = True,
 ):
-    """Returns (y_hat, y_ideal): the IMC-computed DP and the FL DP, per instance.
+    """Returns (y_post, y_pre, y_ideal) per instance: the IMC-computed DP with
+    and without the ADC (same analog noise draws) and the FL DP.
 
     Physical chain per (weight-bit i, input-bit j) plane:
       per-cell discharge dv_unit * (1 + i_k/I) * (1 + t_k/T) for active cells
@@ -104,17 +106,17 @@ def mc_qs_arch(
     # headroom clipping (eq. 17): v_a = min(V_o, V_o,max)
     v_planes = jnp.minimum(v_planes, dv_max)
 
-    if include_adc:
-        v_c = arch.v_c_counts() * dv_unit
-        v_planes = adc_quantize(v_planes, b_adc, 0.0, v_c)
+    v_c = arch.v_c_counts() * dv_unit
+    v_adc = adc_quantize(v_planes, b_adc, 0.0, v_c)
 
-    counts = v_planes / dv_unit  # back to unit-discharge counts
-    # digital power-of-two recombination: y_code = sum_{i,j} ww_i xw_j counts_ij
-    y_code = jnp.einsum("i,j,ije->e", ww_weights, xw_weights, counts)
-    y_hat = y_code * xspec.delta * wspec.delta
+    def recombine(v):
+        counts = v / dv_unit  # back to unit-discharge counts
+        # digital POT recombination: y_code = sum_{i,j} ww_i xw_j counts_ij
+        y_code = jnp.einsum("i,j,ije->e", ww_weights, xw_weights, counts)
+        return y_code * xspec.delta * wspec.delta
 
     y_ideal = jnp.sum(w * x, axis=-1)
-    return y_hat, y_ideal
+    return recombine(v_adc), recombine(v_planes), y_ideal
 
 
 # ---------------------------------------------------------------------------
@@ -128,10 +130,11 @@ def mc_qr_arch(
     w: jax.Array,  # (ens, N)
     arch: QRArch,
     b_adc: Optional[int] = None,
-    include_adc: bool = True,
 ):
     """Charge redistribution across N caps per weight-bit plane:
     V = sum_j (C + c_j)(V_j + v_th,j + v_inj,j) / sum_j (C + c_j), V_j = x_j w^_i V_dd.
+
+    Returns (y_post, y_pre, y_ideal); post/pre-ADC share one analog pass.
     """
     ens, n = x.shape
     qr = arch.qr
@@ -163,18 +166,18 @@ def mc_qr_arch(
     keys = jax.random.split(k_th, arch.bw)
     v_planes = jax.vmap(plane_voltage)(wb, keys)  # (Bw, ens)
 
-    if include_adc:
-        v_c = arch.v_c_volts()
-        mu = float(arch.stats.mu_x) * v_dd / 2.0  # plane mean (w-bit ~ Bern(1/2))
-        v_planes = adc_quantize(v_planes, b_adc, mu - v_c, mu + v_c)
+    v_c = arch.v_c_volts()
+    mu = float(arch.stats.mu_x) * v_dd / 2.0  # plane mean (w-bit ~ Bern(1/2))
+    v_adc = adc_quantize(v_planes, b_adc, mu - v_c, mu + v_c)
 
-    # normalize: plane DP estimate = V * N / V_dd (in x-normalized count units)
-    plane_dp = v_planes * n / v_dd * arch.stats.x_max
-    y_code = jnp.einsum("i,ie->e", ww_weights, plane_dp)
-    y_hat = y_code * wspec.delta
+    def recombine(v):
+        # normalize: plane DP estimate = V * N / V_dd (x-normalized counts)
+        plane_dp = v * n / v_dd * arch.stats.x_max
+        y_code = jnp.einsum("i,ie->e", ww_weights, plane_dp)
+        return y_code * wspec.delta
 
     y_ideal = jnp.sum(w * x, axis=-1)
-    return y_hat, y_ideal
+    return recombine(v_adc), recombine(v_planes), y_ideal
 
 
 # ---------------------------------------------------------------------------
@@ -188,11 +191,12 @@ def mc_cm(
     w: jax.Array,  # (ens, N)
     arch: CMArch,
     b_adc: Optional[int] = None,
-    include_adc: bool = True,
 ):
     """CM: per-column POT-weighted QS discharge encodes |w_j| on BL / BLB
     (sign via differential), clipped at dv_bl_max; per-column mixed-signal
     multiply by x_j; QR aggregation across N columns; single ADC conversion.
+
+    Returns (y_post, y_pre, y_ideal); post/pre-ADC share one analog pass.
     """
     ens, n = x.shape
     qs = arch.qs
@@ -229,15 +233,15 @@ def mc_cm(
     v_th = np.sqrt(K_BOLTZMANN * tech.temp / qr_c) * jax.random.normal(k_th, (ens, n))
     v_o = jnp.sum(caps * (v_mult + v_th), axis=-1) / jnp.sum(caps, axis=-1)
 
-    if include_adc:
-        v_c = arch.v_c_volts()
-        v_o = adc_quantize(v_o, b_adc, -v_c, v_c)
+    v_c = arch.v_c_volts()
+    v_adc = adc_quantize(v_o, b_adc, -v_c, v_c)
 
-    # rescale: V_o = dv_unit/(N x_max) sum_k wc_k x_k  =>  y = Delta_w sum wc x
-    y_hat = v_o * n * arch.stats.x_max / dv_unit * wspec.delta
+    def rescale(v):
+        # V_o = dv_unit/(N x_max) sum_k wc_k x_k  =>  y = Delta_w sum wc x
+        return v * n * arch.stats.x_max / dv_unit * wspec.delta
 
     y_ideal = jnp.sum(w * x, axis=-1)
-    return y_hat, y_ideal
+    return rescale(v_adc), rescale(v_o), y_ideal
 
 
 # ---------------------------------------------------------------------------
@@ -267,14 +271,15 @@ def sample_operands(key, ens: int, n: int, stats, dist: str = "uniform"):
 
 
 def empirical_snrs(key, arch, simulate, ens: int = 1000, b_adc=None, dist="uniform"):
-    """Run a simulator and report empirical (SNR_a-ish pre/post-ADC) values in dB.
+    """Run a simulator ONCE and report empirical pre/post-ADC SNRs in dB.
 
-    Returns dict with snr_T (full chain) and snr_A (chain without ADC).
+    Returns dict with snr_T (full chain) and snr_A (chain without ADC); both
+    come from the same simulator pass (identical noise draws), halving the MC
+    wall time vs running the circuit twice.
     """
-    k_ops, k_sim1, k_sim2 = jax.random.split(key, 3)
+    k_ops, k_sim = jax.random.split(key)
     x, w = sample_operands(k_ops, ens, arch.n, arch.stats, dist)
-    y_full, y_ideal = simulate(k_sim1, x, w, arch, b_adc=b_adc, include_adc=True)
-    y_pre, _ = simulate(k_sim2, x, w, arch, b_adc=b_adc, include_adc=False)
+    y_full, y_pre, y_ideal = simulate(k_sim, x, w, arch, b_adc=b_adc)
 
     def snr_db(y_hat):
         err = y_hat - y_ideal

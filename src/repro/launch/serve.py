@@ -1,18 +1,38 @@
-"""Batched serving driver: continuous-batching-lite with prefill + decode,
+"""Device-resident continuous-batching serve engine: prefill + fused decode,
 optionally executing every matmul through the IMC simulation (the paper's
 technique in deployment position).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
       --batch 4 --prompt-len 32 --gen 16 --imc-mode imc_analytic
 
-Serving loop: a request queue feeds fixed-batch slots; finished sequences are
-replaced by the next request (continuous batching); prefill runs per-request
-(cache scatter at its slot), decode runs batched.  Greedy sampling.
+Engine design (the decode hot loop never leaves the device):
 
-Limitation (documented): the decode cache carries a single scalar position, so
-slots must stay position-synchronized - equal prompt lengths admitted in
-waves.  Per-slot position vectors (full continuous batching) are a planned
-extension; the wave pattern already exercises prefill/decode cache scatter.
+  per-slot positions   the decode cache carries a (slots,) position vector,
+                       so every slot sits at its own sequence depth - requests
+                       with unequal prompt lengths are admitted into one batch
+                       the moment a slot frees (true continuous batching, no
+                       position-synchronized waves).
+  fused decode scan    decode runs T steps at a time inside ONE jitted call
+                       (``jax.lax.scan`` over the step), with slot state
+                       (last token, position, active mask) and greedy argmax
+                       resident on device.  Exactly one (slots, T) int32 block
+                       crosses to the host per chunk - the per-token logits
+                       readback + blocking sync of a Python-tick loop is gone.
+                       T is the largest power of two that no active request
+                       overruns, so chunking never generates waste tokens and
+                       the jit cache stays O(log max_chunk).
+  bucketed prefill     prompts are right-padded to power-of-two length buckets
+                       (one compile per bucket, not per length); causality
+                       isolates the pad positions, logits are gathered at each
+                       row's true last position, and sliding-window ring
+                       caches are packed per-row from the true tail.  The slot
+                       cache-insert is a single jitted dynamic_update_slice
+                       scatter over the cache tree.  Recurrent (ssm/rglru) and
+                       MoE patterns use exact-length prefill instead: a
+                       recurrent state would integrate the pad garbage, and
+                       pad tokens would contend for expert capacity.
+
+Greedy sampling.  Finished sequences free their slot for the next request.
 """
 from __future__ import annotations
 
@@ -20,7 +40,7 @@ import argparse
 import dataclasses
 import logging
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +51,8 @@ from repro.models import decode_step, init_cache, init_params, prefill
 
 log = logging.getLogger("repro.serve")
 
+MIN_BUCKET = 8
+
 
 @dataclasses.dataclass
 class Request:
@@ -39,85 +61,233 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: Optional[float] = None
+    t_first: Optional[float] = None  # first generated token on the host
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_submit is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
 
 
-class Server:
-    """Fixed-slot continuous batching server (functional JAX inner steps)."""
+def needs_exact_prefill(cfg) -> bool:
+    """Patterns that cannot take padded (bucketed) prefill: recurrent state
+    integrates pad garbage; MoE pad tokens contend for expert capacity."""
+    kinds = tuple(cfg.pattern) + tuple(cfg.tail_kinds)
+    return any(k in ("ssm", "rglru") for k in kinds) or cfg.n_experts > 0
+
+
+def prefill_bucket(length: int, bucketable: bool, cache_len: int) -> int:
+    """Power-of-two prefill bucket for a prompt length (>= length, one jit
+    compile per bucket); exact length when the pattern requires it."""
+    if not bucketable:
+        return length
+    p = MIN_BUCKET
+    while p < length:
+        p *= 2
+    return min(p, cache_len) if cache_len >= length else p
+
+
+class Engine:
+    """Fixed-slot continuous-batching engine with a fused decode scan.
+
+    Host-side state is bookkeeping only (which request owns which slot);
+    everything the decode loop touches - cache, per-slot positions, last
+    tokens - lives on device between jitted calls.
+    """
 
     def __init__(self, cfg, params, batch_slots: int, cache_len: int,
-                 rng: Optional[jax.Array] = None):
+                 rng: Optional[jax.Array] = None, max_chunk: int = 8):
         self.cfg = cfg
         self.params = params
-        self.slots: List[Optional[Request]] = [None] * batch_slots
-        self.cache = init_cache(cfg, batch_slots, cache_len)
+        self.batch_slots = batch_slots
         self.cache_len = cache_len
-        self.slot_pos = np.zeros(batch_slots, np.int32)
-        self.last_token = np.zeros(batch_slots, np.int32)
+        self.max_chunk = max_chunk
         self.rng = rng
-        self._decode = jax.jit(
-            lambda p, t, c, key: decode_step(p, cfg, t, c, rng=key)
-        )
+        self.bucketable = not needs_exact_prefill(cfg)
 
-    # -- admission -----------------------------------------------------------
-    def admit(self, req: Request) -> bool:
-        for i, s in enumerate(self.slots):
-            if s is None:
-                self.slots[i] = req
-                self._prefill_slot(i, req)
-                return True
-        return False
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        cache = init_cache(cfg, batch_slots, cache_len)
+        cache.pop("pos")
+        self.cache = cache  # blocks/tail only: positions are engine state
+        self.pos = jnp.zeros((batch_slots,), jnp.int32)
+        self.last_token = jnp.zeros((batch_slots,), jnp.int32)
+        self.finished: List[Request] = []
 
-    def _prefill_slot(self, i: int, req: Request):
-        toks = jnp.asarray(req.prompt)[None, :]
-        logits, cache1 = prefill(self.params, self.cfg, toks,
-                                 cache_len=self.cache_len, rng=self.rng)
-        # scatter the single-request cache into slot i of the batched cache
-        def put(batched, single):
-            if batched.ndim == 0 or batched.shape == single.shape == ():
-                return batched
-            # slot axis is the batch axis: blocks (n, B, ...) / tail (B, ...)
-            for axis in range(batched.ndim):
-                if (batched.shape[axis] == len(self.slots)
-                        and single.shape[axis] == 1):
-                    idx = [slice(None)] * batched.ndim
-                    idx[axis] = i
-                    sidx = [slice(None)] * single.ndim
-                    sidx[axis] = 0
-                    return batched.at[tuple(idx)].set(single[tuple(sidx)])
-            return batched
+        # perf counters (consumed by benchmarks/serve_bench.py)
+        self.decode_calls = 0
+        self.decode_steps = 0
+        self.host_transfer_bytes = 0
 
-        self.cache = jax.tree_util.tree_map(
-            lambda b, s: put(b, s) if hasattr(b, "at") else b,
-            {k: v for k, v in self.cache.items() if k != "pos"},
-            {k: v for k, v in cache1.items() if k != "pos"},
-        )
-        self.cache["pos"] = jnp.asarray(int(cache1["pos"]), jnp.int32)
-        self.slot_pos[i] = len(req.prompt)
-        self.last_token[i] = int(jnp.argmax(logits[0, -1]))
-        req.out.append(int(self.last_token[i]))
+        self._prefill_fns: Dict[int, object] = {}
+        self._decode_fns: Dict[int, object] = {}
+        self._insert_fn = jax.jit(self._insert_impl)
 
-    # -- one decode tick -------------------------------------------------------
-    def tick(self):
-        toks = jnp.asarray(self.last_token)
-        key = None
-        if self.rng is not None:
-            self.rng, key = jax.random.split(self.rng)
-        logits, self.cache = self._decode(self.params, toks, self.cache, key)
-        # np.array (copy): np.asarray of a jax array is a read-only view
-        nxt = np.array(jnp.argmax(logits[:, 0], axis=-1), np.int32)
-        for i, req in enumerate(self.slots):
-            if req is None or req.done:
-                continue
-            req.out.append(int(nxt[i]))
-            self.slot_pos[i] += 1
-            if len(req.out) >= req.max_new:
-                req.done = True
-                self.slots[i] = None
-        self.last_token = nxt
+    # -- rng ------------------------------------------------------------------
+    def _next_key(self):
+        if self.rng is None:
+            return None
+        self.rng, key = jax.random.split(self.rng)
+        return key
 
+    # -- admission ------------------------------------------------------------
     @property
     def active(self) -> int:
         return sum(1 for s in self.slots if s is not None)
+
+    def admit(self, req: Request) -> bool:
+        free = next((i for i, s in enumerate(self.slots) if s is None), None)
+        if free is None:
+            return False
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
+        length = len(req.prompt)
+        # decode writes K/V at positions length .. length + max_new - 2
+        if length + req.max_new - 1 > self.cache_len:
+            raise ValueError(
+                f"prompt ({length}) + max_new ({req.max_new}) exceeds "
+                f"cache_len ({self.cache_len})")
+        bucket = prefill_bucket(length, self.bucketable, self.cache_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :length] = req.prompt
+        pf = self._prefill_fns.get(bucket)
+        if pf is None:
+            pf = self._prefill_fns[bucket] = self._make_prefill()
+        tok0, cache1 = pf(self.params, jnp.asarray(toks),
+                          jnp.asarray([length], jnp.int32), self._next_key())
+        self.cache, self.last_token, self.pos = self._insert_fn(
+            self.cache, {k: v for k, v in cache1.items() if k != "pos"},
+            jnp.asarray(free, jnp.int32), tok0[0],
+            jnp.asarray(length, jnp.int32), self.last_token, self.pos,
+        )
+        self.slots[free] = req
+        req.out.append(int(tok0[0]))  # 4-byte sync, once per request (TTFT)
+        req.t_first = time.perf_counter()
+        if len(req.out) >= req.max_new:
+            self._retire(free)
+        return True
+
+    def _make_prefill(self):
+        cfg, cache_len, bucketable = self.cfg, self.cache_len, self.bucketable
+
+        def pf(params, toks, true_len, key):
+            logits, cache1 = prefill(
+                params, cfg, toks, cache_len=cache_len, rng=key,
+                true_len=true_len if bucketable else None,
+            )
+            tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return tok0, cache1
+
+        return jax.jit(pf)
+
+    def _insert_impl(self, cache, cache1, slot, tok0, length, last_token, pos):
+        n_slots = self.batch_slots
+
+        def put(batched, single):
+            if getattr(batched, "ndim", 0) == 0:
+                return batched
+            # slot axis is the batch axis: blocks (n_cycles, B, ...) / (B, ...)
+            for axis in range(batched.ndim):
+                if (batched.shape[axis] == n_slots
+                        and single.shape[axis] == 1):
+                    starts = [0] * batched.ndim
+                    starts[axis] = slot
+                    return jax.lax.dynamic_update_slice(
+                        batched, single.astype(batched.dtype), tuple(starts)
+                    )
+            return batched
+
+        new_cache = jax.tree_util.tree_map(put, cache, cache1)
+        return (new_cache, last_token.at[slot].set(tok0),
+                pos.at[slot].set(length))
+
+    def _retire(self, i: int):
+        req = self.slots[i]
+        req.done = True
+        self.slots[i] = None
+        self.finished.append(req)
+
+    # -- fused decode ----------------------------------------------------------
+    def next_chunk(self) -> int:
+        """Largest power-of-two scan length no active request overruns."""
+        rem = [r.max_new - len(r.out) for r in self.slots if r is not None]
+        if not rem:
+            return 0
+        cap = min(min(rem), self.max_chunk)
+        t = 1
+        while t * 2 <= cap:
+            t *= 2
+        return t
+
+    def _make_decode(self, n_steps: int):
+        cfg = self.cfg
+
+        def chunk(params, cache, last_tok, pos, active, key):
+            def step(carry, t):
+                cache, tok, pos = carry
+                k = None if key is None else jax.random.fold_in(key, t)
+                logits, new_cache = decode_step(
+                    params, cfg, tok, dict(cache, pos=pos), rng=k
+                )
+                nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                nxt = jnp.where(active, nxt, tok)
+                new_pos = jnp.where(active, pos + 1, pos)
+                new_cache.pop("pos")
+                return (new_cache, nxt, new_pos), nxt
+
+            (cache, tok, pos), toks = jax.lax.scan(
+                step, (cache, last_tok, pos), jnp.arange(n_steps)
+            )
+            return cache, tok, pos, toks.T  # (slots, T)
+
+        return jax.jit(chunk)
+
+    def decode_chunk(self, n_steps: Optional[int] = None) -> np.ndarray:
+        """Run ``n_steps`` fused decode steps; returns the (slots, T) token
+        block (the single device->host transfer of the chunk)."""
+        if n_steps is None:
+            n_steps = self.next_chunk()
+        if n_steps <= 0:
+            return np.zeros((self.batch_slots, 0), np.int32)
+        fn = self._decode_fns.get(n_steps)
+        if fn is None:
+            fn = self._decode_fns[n_steps] = self._make_decode(n_steps)
+        active = jnp.asarray(
+            np.array([s is not None for s in self.slots]))
+        self.cache, self.last_token, self.pos, toks = fn(
+            self.params, self.cache, self.last_token, self.pos, active,
+            self._next_key(),
+        )
+        block = np.asarray(toks)  # the one host transfer per chunk
+        self.decode_calls += 1
+        self.decode_steps += n_steps
+        self.host_transfer_bytes += block.nbytes
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            take = min(n_steps, req.max_new - len(req.out))
+            req.out.extend(int(t) for t in block[i, :take])
+            if len(req.out) >= req.max_new:
+                self._retire(i)
+        return block
+
+
+def serve(engine: Engine, requests: List[Request]) -> List[Request]:
+    """Drive the engine until every request finishes; returns them in
+    completion order."""
+    pending = list(requests)
+    done_mark = len(engine.finished)
+    while pending or engine.active:
+        while pending and engine.admit(pending[0]):
+            req = pending.pop(0)
+            log.info("admitted request %d len=%d (active=%d)",
+                     req.rid, len(req.prompt), engine.active)
+        engine.decode_chunk()
+        for r in engine.finished[done_mark:]:
+            log.info("finished request %d: %d tokens", r.rid, len(r.out))
+        done_mark = len(engine.finished)
+    return engine.finished
 
 
 def main(argv=None):
@@ -127,7 +297,13 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prompt-lens", default=None,
+                    help="comma list of prompt lengths cycled over the "
+                         "requests (unequal-length admission); overrides "
+                         "--prompt-len")
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="max fused decode steps per jitted scan call")
     ap.add_argument("--imc-mode", default=None,
                     choices=[None, "fakequant", "imc_analytic",
                              "imc_bitserial"])
@@ -144,35 +320,37 @@ def main(argv=None):
                                         v_wl=args.imc_vwl))
         rng = jax.random.PRNGKey(7)
 
+    if args.prompt_lens:
+        lens = [int(x) for x in args.prompt_lens.split(",")]
+    else:
+        lens = [args.prompt_len]
     params = init_params(jax.random.PRNGKey(0), cfg)
-    cache_len = args.prompt_len + args.gen + 8
-    server = Server(cfg, params, args.batch, cache_len, rng=rng)
+    bucketable = not needs_exact_prefill(cfg)
+    max_bucket = max(prefill_bucket(l, bucketable, 10**9) for l in lens)
+    cache_len = max_bucket + args.gen + 8
+    engine = Engine(cfg, params, args.batch, cache_len, rng=rng,
+                    max_chunk=args.chunk)
 
     rnp = np.random.default_rng(0)
-    pending = [
+    requests = [
         Request(rid=i,
-                prompt=rnp.integers(0, cfg.vocab_size, args.prompt_len),
+                prompt=rnp.integers(0, cfg.vocab_size, lens[i % len(lens)]),
                 max_new=args.gen)
         for i in range(args.requests)
     ]
-    finished = []
     t0 = time.perf_counter()
-    ticks = 0
-    while pending or server.active:
-        while pending and server.admit(pending[0]):
-            req = pending.pop(0)
-            log.info("admitted request %d (active=%d)", req.rid, server.active)
-        before = [s for s in server.slots if s is not None]
-        server.tick()
-        ticks += 1
-        for r in before:
-            if r.done:
-                finished.append(r)
-                log.info("finished request %d: %d tokens", r.rid, len(r.out))
+    finished = serve(engine, requests)
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.out) for r in finished)
-    log.info("served %d requests, %d tokens, %d ticks, %.1f tok/s",
-             len(finished), total_tokens, ticks, total_tokens / dt)
+    tok_s = total_tokens / dt if dt > 0 else float("nan")
+    ttfts = [r.ttft for r in finished if r.ttft is not None]
+    ttft_ms = 1e3 * float(np.mean(ttfts)) if ttfts else float("nan")
+    log.info(
+        "served %d requests, %d tokens, %d fused chunks (%d steps), "
+        "%.1f tok/s, mean TTFT %.1f ms, %d host-transfer bytes",
+        len(finished), total_tokens, engine.decode_calls,
+        engine.decode_steps, tok_s, ttft_ms, engine.host_transfer_bytes,
+    )
     return finished
 
 

@@ -346,19 +346,27 @@ def attention_decode(
     params,
     x,  # (B, 1, d)
     cache,  # {"k","v"}: (B, Skv, Hkv, hd); ring buffer when window
-    pos,  # scalar int32: number of tokens already in the cache
+    pos,  # int32 scalar OR (B,) per-slot vector: tokens already in the cache
     dims: AttnDims,
     imc: IMCConfig = DIGITAL,
     rng=None,
 ):
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    # per-slot positions: a scalar broadcasts to the whole batch (wave-style
+    # synchronized decode); a (B,) vector lets every slot sit at its own depth
+    # (continuous batching with unequal prompt lengths)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos_b[:, None]
     q, k_new, v_new = _project_qkv(params, x, dims, positions, imc, rng)
     s_kv = cache["k"].shape[1]
     # ring buffer for sliding windows; plain append for global attention
-    slot = pos % s_kv if dims.window is not None else pos
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    if dims.window is not None:
+        slot = pos_b % s_kv
+    else:
+        slot = jnp.minimum(pos_b, s_kv - 1)
+    rows = jnp.arange(b)
+    k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
     k = ws(k, "kv_bshd")
     v = ws(v, "kv_bshd")
 
@@ -371,10 +379,14 @@ def attention_decode(
         s = dims.softcap_val * jnp.tanh(s / dims.softcap_val)
     idx = jnp.arange(s_kv)
     if dims.window is not None:
-        valid = jnp.where(pos + 1 >= s_kv, jnp.ones_like(idx, bool), idx <= pos)
+        valid = jnp.where(
+            (pos_b + 1 >= s_kv)[:, None],
+            jnp.ones((b, s_kv), bool),
+            idx[None, :] <= pos_b[:, None],
+        )
     else:
-        valid = idx <= pos
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+        valid = idx[None, :] <= pos_b[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     # softmax over the (possibly model-axis-sharded) sequence dim: GSPMD emits
     # the partial-max/sum + all-reduce flash-decode pattern automatically
     p = jax.nn.softmax(s, axis=-1)

@@ -124,7 +124,8 @@ def _head(params, cfg: ArchConfig, x):
 # ---------------------------------------------------------------------------
 
 
-def _scan_full(params, cfg: ArchConfig, x, positions, rng, want_cache, cache_len):
+def _scan_full(params, cfg: ArchConfig, x, positions, rng, want_cache,
+               cache_len, true_len=None):
     n_full = cfg.n_full_cycles
 
     def cycle(x_aux, inp):
@@ -136,7 +137,8 @@ def _scan_full(params, cfg: ArchConfig, x, positions, rng, want_cache, cache_len
                 jax.random.fold_in(rng, pi), li
             )
             x, c, a = tf.apply_block_full(
-                bp[f"p{pi}"], x, cfg, kind, positions, r, want_cache, cache_len
+                bp[f"p{pi}"], x, cfg, kind, positions, r, want_cache,
+                cache_len, true_len=true_len,
             )
             aux = aux + a
             caches.append(c)
@@ -157,7 +159,7 @@ def _scan_full(params, cfg: ArchConfig, x, positions, rng, want_cache, cache_len
         r = None if rng is None else jax.random.fold_in(rng, 10_000 + ti)
         x, c, a = tf.apply_block_full(
             params["tail"][f"t{ti}"], x, cfg, kind, positions, r,
-            want_cache, cache_len,
+            want_cache, cache_len, true_len=true_len,
         )
         aux = aux + a
         tail_caches[f"t{ti}"] = c
@@ -212,16 +214,33 @@ def prefill(
     cache_len: int,
     prefix_embeds=None,
     rng=None,
+    true_len=None,  # optional (B,) int32: true prompt lengths (S is padding)
 ):
-    """Process a prompt; returns (last-position logits, cache)."""
+    """Process a prompt; returns (last-position logits, cache).
+
+    ``true_len`` enables bucketed prefill: ``tokens`` may be right-padded to a
+    bucket length S, with each row's real prompt occupying the first
+    ``true_len[i]`` positions.  Causality keeps the padded positions from
+    contaminating real ones; the returned logits are gathered at each row's
+    true last position, ``cache["pos"]`` becomes the (B,) vector ``true_len``,
+    and sliding-window ring caches are packed per-row from the true tail.
+    Attention KV-cache rows beyond ``true_len`` hold pad garbage but are
+    masked during decode until they are overwritten position-by-position.
+    """
     b, s = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     x = _embed_inputs(params, cfg, tokens, prefix_embeds, positions)
     x, _, caches, tail_caches = _scan_full(
-        params, cfg, x, positions, rng, True, cache_len
+        params, cfg, x, positions, rng, True, cache_len, true_len=true_len
     )
-    logits = _head(params, cfg, x[:, -1:])
-    cache = {"blocks": caches, "pos": jnp.asarray(s, jnp.int32)}
+    if true_len is None:
+        x_last = x[:, -1:]
+        pos = jnp.asarray(s, jnp.int32)
+    else:
+        pos = jnp.asarray(true_len, jnp.int32)
+        x_last = x[jnp.arange(b), pos - 1][:, None, :]
+    logits = _head(params, cfg, x_last)
+    cache = {"blocks": caches, "pos": pos}
     if tail_caches:
         cache["tail"] = tail_caches
     return logits, cache
@@ -234,10 +253,15 @@ def decode_step(
     cache,
     rng=None,
 ):
-    """One decode step. Returns (logits (B, 1, V), new_cache)."""
+    """One decode step. Returns (logits (B, 1, V), new_cache).
+
+    ``cache["pos"]`` may be a scalar (all slots synchronized) or a (B,)
+    vector of per-slot positions (continuous batching); either way the
+    returned cache carries ``pos + 1`` with the same shape.
+    """
     b = token.shape[0]
     pos = cache["pos"]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))[:, None]
     x = _embed_inputs(params, cfg, token[:, None], None, positions)
 
     def cycle(x, inp):

@@ -124,6 +124,7 @@ def apply_block_full(
     rng,
     want_cache: bool,
     cache_len: int,
+    true_len=None,  # optional (B,) true prompt lengths (bucketed prefill)
 ):
     """Full-sequence block. Returns (x, cache_or_None, moe_aux)."""
     h = apply_norm(p["norm1"], x, cfg.norm_kind)
@@ -139,10 +140,16 @@ def apply_block_full(
         ctx = ctx.reshape(b, s, dims.n_heads * dims.head_dim)
         out = attn_lib.linear(p["mixer"]["wo"], ctx, cfg.imc, rng)
         if want_cache:
-            cache = _pack_kv_cache(k, v, cache_len, dims.window, x.dtype)
+            cache = _pack_kv_cache(k, v, cache_len, dims.window, x.dtype,
+                                   true_len)
     elif kind == "ssm":
         out, state = ssm_lib.ssm_forward(p["mixer"], h, cfg, cfg.imc, rng)
         if want_cache:
+            if true_len is not None:
+                # recurrent state integrates pad garbage; serve engines must
+                # use exact-length prefill for recurrent patterns
+                raise ValueError("bucketed (padded) prefill is not supported "
+                                 "for ssm blocks")
             cache = _pack_ssm_cache(p, h, state, cfg, x.dtype)
         x = x + (apply_norm(p["norm1_post"], out, cfg.norm_kind)
                  if cfg.post_norm else out)
@@ -150,6 +157,9 @@ def apply_block_full(
     elif kind == "rglru":
         out, h_last = rg_lib.rglru_forward(p["mixer"], h, cfg, cfg.imc, rng)
         if want_cache:
+            if true_len is not None:
+                raise ValueError("bucketed (padded) prefill is not supported "
+                                 "for rglru blocks")
             cache = _pack_rglru_cache(p, h, h_last, cfg, x.dtype)
     else:
         raise ValueError(kind)
@@ -190,8 +200,17 @@ def apply_block_decode(p, x, cfg: ArchConfig, kind: str, cache, pos, rng):
 # ---------------------------------------------------------------------------
 
 
-def _pack_kv_cache(k, v, cache_len: int, window: Optional[int], dtype):
-    """Arrange prefill K/V into the decode cache layout."""
+def _pack_kv_cache(k, v, cache_len: int, window: Optional[int], dtype,
+                   true_len=None):
+    """Arrange prefill K/V into the decode cache layout.
+
+    With ``true_len`` (bucketed prefill: per-row true lengths, S is the padded
+    bucket), the linear (global) layout needs no special casing - rows beyond
+    ``true_len`` hold pad garbage that decode masks and then overwrites.  The
+    sliding-window ring layout does: each row's ring must be packed from ITS
+    true tail ``[true_len - w, true_len)`` at ring phase ``true_len % w``, or
+    the pad tail would alias (and clobber) live in-window positions.
+    """
     b, s = k.shape[:2]
     if window is None:
         pad = cache_len - s
@@ -200,14 +219,31 @@ def _pack_kv_cache(k, v, cache_len: int, window: Optional[int], dtype):
         vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
         return {"k": kc, "v": vc}
     w = min(window, cache_len)
-    if s >= w:
+    if s < w:
+        # slot j = position j for every row, padded or not
+        kc = jnp.pad(k, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+        return {"k": kc.astype(dtype), "v": vc.astype(dtype)}
+    if true_len is None:
         k_last, v_last = k[:, s - w :], v[:, s - w :]
         shift = s % w
         kc = jnp.roll(k_last, shift, axis=1)
         vc = jnp.roll(v_last, shift, axis=1)
-    else:
-        kc = jnp.pad(k, ((0, 0), (0, w - s), (0, 0), (0, 0)))
-        vc = jnp.pad(v, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+        return {"k": kc.astype(dtype), "v": vc.astype(dtype)}
+
+    tl = jnp.asarray(true_len, jnp.int32)
+
+    def ring_row(k_row, v_row, tl_row):  # (S, H, hd), (S, H, hd), ()
+        start = jnp.clip(tl_row - w, 0, s - w)
+        ks = jax.lax.dynamic_slice_in_dim(k_row, start, w, axis=0)
+        vs = jax.lax.dynamic_slice_in_dim(v_row, start, w, axis=0)
+        # element j holds position start+j; ring slot of position p is p % w,
+        # so roll by start % w (0 when the prompt hasn't filled the window:
+        # start = 0 and slot j = position j already)
+        shift = start % w
+        return jnp.roll(ks, shift, axis=0), jnp.roll(vs, shift, axis=0)
+
+    kc, vc = jax.vmap(ring_row)(k, v, tl)
     return {"k": kc.astype(dtype), "v": vc.astype(dtype)}
 
 

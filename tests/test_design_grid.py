@@ -1,0 +1,64 @@
+"""Vectorized design-space grid (design._grid_metrics) must agree with the
+scalar Table III reference (design.evaluate_point) across the whole grid."""
+import numpy as np
+import pytest
+
+from repro.core import design
+from repro.core.quant import UNIFORM_STATS
+from repro.core.compute_models import TECH_65NM
+
+
+@pytest.mark.parametrize("kind", ["qs", "qr", "cm"])
+def test_grid_matches_evaluate_point(kind):
+    n, bx, bw, max_rows = 512, 6, 6, 512
+    g = design._grid_metrics(kind, n, bx, bw, UNIFORM_STATS, TECH_65NM,
+                             max_rows, 0.5)
+    checked = 0
+    for ki, knob in enumerate(g["knobs"]):
+        for bi, n_banks in enumerate(g["banks"]):
+            # scalar reference with an unreachable target => always a point
+            pt = design.evaluate_point(
+                kind, n, int(n_banks), bx, bw, UNIFORM_STATS, TECH_65NM,
+                float(knob), snr_t_target_db=-1e9, max_rows=max_rows,
+            )
+            if pt is None:  # invalid banking (rows out of range)
+                assert not g["valid"][ki, bi]
+                continue
+            assert g["valid"][ki, bi]
+            np.testing.assert_allclose(g["snr_t_db"][ki, bi], pt.snr_t_db,
+                                       rtol=1e-9, atol=1e-9)
+            np.testing.assert_allclose(g["energy"][ki, bi], pt.energy_per_dp,
+                                       rtol=1e-9)
+            np.testing.assert_allclose(g["delay"][ki, bi], pt.delay_per_dp,
+                                       rtol=1e-9)
+            checked += 1
+    assert checked > 20
+
+
+def test_optimize_matches_scalar_exhaustive():
+    """The batched optimize must return the same design point as the legacy
+    exhaustive scalar loop."""
+    for n, target in [(256, 12.0), (256, 26.0), (2048, 18.0), (512, 20.0)]:
+        fast = design.optimize(n=n, snr_t_target_db=target)
+        # scalar exhaustive reference
+        best = None
+        for kind in ("qs", "qr", "cm"):
+            from repro.core import precision as prec
+            pa = prec.assign_precisions(target + 3.0, n, UNIFORM_STATS)
+            knobs = design.C_O_GRID if kind == "qr" else design.V_WL_GRID
+            for knob in knobs:
+                for n_banks in design.BANK_SPLITS:
+                    pt = design.evaluate_point(
+                        kind, n, n_banks, pa.bx, pa.bw, UNIFORM_STATS,
+                        TECH_65NM, knob, target)
+                    if pt is None:
+                        continue
+                    if best is None or pt.energy_per_dp < best.energy_per_dp:
+                        best = pt
+        assert (fast is None) == (best is None)
+        if best is not None:
+            assert fast.arch_kind == best.arch_kind
+            assert fast.n_banks == best.n_banks
+            np.testing.assert_allclose(fast.energy_per_dp, best.energy_per_dp,
+                                       rtol=1e-12)
+            np.testing.assert_allclose(fast.knob, best.knob)
