@@ -1,24 +1,33 @@
-"""Serving micro-bench: tok/s, time-to-first-token and host-transfer traffic
-for the continuous-batching engine vs a FROZEN copy of the seed wave server.
+"""Serving micro-bench: tok/s, time-to-first-token, host-transfer traffic and
+KV memory per active token for the PAGED engine vs a FROZEN copy of the PR-2
+contiguous-cache engine (and the seed wave server, kept as a reference).
 
-The frozen ``WaveServer`` below preserves the pre-rewrite serving design (kept
-ONLY as the perf reference): one decode step per Python tick with a host sync
-(`np.array` of the argmax) every token, a host-side `tree_map` loop scattering
-each prefill cache into its slot, and a single scalar cache position that
-forces equal-prompt-length admission waves.  The engine
-(`repro.launch.serve.Engine`) replaces all three: per-slot position vectors,
-a fused `lax.scan` decode chunk (one (slots, T) int32 host transfer per
-chunk), and bucketed prefill with a jitted slot insert.
+Two frozen baselines live here (kept ONLY as perf references):
+
+  ``WaveServer``        the seed design: one decode step per Python tick with
+                        a host sync every token, host-side cache scatter, and
+                        a single scalar cache position (equal-prompt waves).
+  ``ContiguousEngine``  the PR-2 design: per-slot position vectors, fused
+                        decode scan, bucketed prefill - but every slot owns a
+                        contiguous cache_len KV slice sized for the LONGEST
+                        request, and prefill admits one request per call.
+
+The live engine (`repro.launch.serve.Engine`) replaces the contiguous cache
+with a paged block pool + per-slot block tables (KV memory proportional to
+tokens actually held) and admits the FIFO prefix of same-bucket pending
+requests as one batched (R, bucket) prefill call.
 
 Structural counters reported per configuration:
 
-  sync_bytes_per_token   int32 token traffic actually copied to the host,
-                         amortized per generated token
-  jit_out_bytes_per_tick bytes leaving the jitted decode computation per tick
-                         (wave: the full (slots, 1, vocab) f32 logits cross
-                         the jit boundary every token; engine: logits never
-                         leave the scan - only the (slots, T) token block)
-  host_syncs_per_token   blocking device->host round trips per token
+  sync_bytes_per_token      int32 token traffic copied to the host / token
+  jit_out_bytes_per_tick    bytes leaving the jitted decode per tick
+  host_syncs_per_token      blocking device->host round trips per token
+  kv_bytes_per_active_token KV cache bytes held per token resident in an
+                            active slot, sampled after every decode chunk
+                            (contiguous: the full slots x cache_len
+                            allocation; paged: allocated blocks only)
+  prefill_calls             prefill dispatches (paged batches same-bucket
+                            admissions; contiguous pays one per request)
 
 CPU wall times are indicative; the structural counters transfer to TPU.
 ``bench_records()`` returns machine-readable dicts (consumed by
@@ -30,14 +39,15 @@ committed ``BENCH_serve.json`` baseline is produced with::
 from __future__ import annotations
 
 import time
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.launch.serve import Engine, Request, serve
+from repro.launch.serve import (Engine, Request, needs_exact_prefill,
+                                prefill_bucket)
 from repro.models import decode_step, init_cache, init_params, prefill
 
 Row = Tuple[str, float, str]
@@ -47,14 +57,23 @@ BATCH = 4
 REQUESTS = 8
 PROMPT_LEN = 12
 GEN = 8
+# the mixed short/long workload: mostly short prompts with occasional long
+# ones - the contiguous engine must size EVERY slot for the longest
+MIXED_LENS = [4, 6, 48, 5, 8, 44, 6, 7]
 # measured request count per mode (bitserial is ~30x slower per token on the
 # CPU reference path; fewer requests keep the suite inside the CI budget)
 MODES = {None: REQUESTS, "imc_analytic": REQUESTS, "imc_bitserial": 4}
-WARMUP_REQUESTS = 2  # enough to compile prefill bucket + all chunk sizes
+# warmup replays the FULL measured workload once: the paged engine compiles
+# one prefill per (R-pad, bucket) group shape, and the group composition is a
+# deterministic function of the request schedule, so an identical warmup pass
+# is the only way to cover every shape (a short warmup leaves compiles inside
+# the measured window and understates steady-state tok/s)
+WARMUP_REQUESTS = 2  # wave-server warmup only (exact-length prefill)
+REPEATS = 3  # measured runs per engine; best wall time is reported
 
 
 # ---------------------------------------------------------------------------
-# frozen seed wave server (pre-rewrite design, perf reference only)
+# frozen seed wave server (pre-PR-2 design, perf reference only)
 # ---------------------------------------------------------------------------
 
 
@@ -156,6 +175,228 @@ def _serve_wave(server: WaveServer, requests: List[Request]) -> List[Request]:
 
 
 # ---------------------------------------------------------------------------
+# frozen PR-2 contiguous-cache engine (pre-paging design, perf reference only)
+# ---------------------------------------------------------------------------
+
+
+class ContiguousEngine:
+    """FROZEN copy of the PR-2 engine: per-slot positions and a fused decode
+    scan, but each slot owns a contiguous (cache_len, ...) KV slice and
+    prefill admits exactly one request per call."""
+
+    def __init__(self, cfg, params, batch_slots: int, cache_len: int,
+                 rng: Optional[jax.Array] = None, max_chunk: int = 8):
+        self.cfg = cfg
+        self.params = params
+        self.batch_slots = batch_slots
+        self.cache_len = cache_len
+        self.max_chunk = max_chunk
+        self.rng = rng
+        self.bucketable = not needs_exact_prefill(cfg)
+
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        cache = init_cache(cfg, batch_slots, cache_len)
+        cache.pop("pos")
+        self.cache = cache
+        self.pos = jnp.zeros((batch_slots,), jnp.int32)
+        self.last_token = jnp.zeros((batch_slots,), jnp.int32)
+        self.finished: List[Request] = []
+
+        self.decode_calls = 0
+        self.decode_steps = 0
+        self.host_transfer_bytes = 0
+        self.prefill_calls = 0
+        self.prefill_rows = 0
+
+        self._prefill_fns: Dict[int, object] = {}
+        self._decode_fns: Dict[int, object] = {}
+        self._insert_fn = jax.jit(self._insert_impl)
+        self._kv_bytes = sum(
+            leaf.size * leaf.dtype.itemsize
+            for key, leaf in _kv_leaves(self.cache)
+        )
+
+    def kv_bytes_in_use(self) -> int:
+        """The whole slots x cache_len allocation backs every admission."""
+        return self._kv_bytes
+
+    def live_tokens(self) -> int:
+        return sum(len(r.prompt) + len(r.out) for r in self.slots
+                   if r is not None)
+
+    def _next_key(self):
+        if self.rng is None:
+            return None
+        self.rng, key = jax.random.split(self.rng)
+        return key
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def admit_pending(self, pending: List[Request]) -> List[Request]:
+        admitted = []
+        while pending and self.admit(pending[0]):
+            admitted.append(pending.pop(0))
+        return admitted
+
+    def admit(self, req: Request) -> bool:
+        free = next((i for i, s in enumerate(self.slots) if s is None), None)
+        if free is None:
+            return False
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
+        length = len(req.prompt)
+        if length + req.max_new - 1 > self.cache_len:
+            raise ValueError(
+                f"prompt ({length}) + max_new ({req.max_new}) exceeds "
+                f"cache_len ({self.cache_len})")
+        bucket = prefill_bucket(length, self.bucketable, self.cache_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :length] = req.prompt
+        pf = self._prefill_fns.get(bucket)
+        if pf is None:
+            pf = self._prefill_fns[bucket] = self._make_prefill()
+        tok0, cache1 = pf(self.params, jnp.asarray(toks),
+                          jnp.asarray([length], jnp.int32), self._next_key())
+        self.cache, self.last_token, self.pos = self._insert_fn(
+            self.cache, {k: v for k, v in cache1.items() if k != "pos"},
+            jnp.asarray(free, jnp.int32), tok0[0],
+            jnp.asarray(length, jnp.int32), self.last_token, self.pos,
+        )
+        self.prefill_calls += 1
+        self.prefill_rows += 1
+        self.slots[free] = req
+        req.out.append(int(tok0[0]))  # 4-byte sync, once per request (TTFT)
+        req.t_first = time.perf_counter()
+        if len(req.out) >= req.max_new:
+            self._retire(free)
+        return True
+
+    def _make_prefill(self):
+        cfg, cache_len, bucketable = self.cfg, self.cache_len, self.bucketable
+
+        def pf(params, toks, true_len, key):
+            logits, cache1 = prefill(
+                params, cfg, toks, cache_len=cache_len, rng=key,
+                true_len=true_len if bucketable else None,
+            )
+            tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return tok0, cache1
+
+        return jax.jit(pf)
+
+    def _insert_impl(self, cache, cache1, slot, tok0, length, last_token, pos):
+        n_slots = self.batch_slots
+
+        def put(batched, single):
+            if getattr(batched, "ndim", 0) == 0:
+                return batched
+            for axis in range(batched.ndim):
+                if (batched.shape[axis] == n_slots
+                        and single.shape[axis] == 1):
+                    starts = [0] * batched.ndim
+                    starts[axis] = slot
+                    return jax.lax.dynamic_update_slice(
+                        batched, single.astype(batched.dtype), tuple(starts)
+                    )
+            return batched
+
+        new_cache = jax.tree_util.tree_map(put, cache, cache1)
+        return (new_cache, last_token.at[slot].set(tok0),
+                pos.at[slot].set(length))
+
+    def _retire(self, i: int):
+        req = self.slots[i]
+        req.done = True
+        self.slots[i] = None
+        self.finished.append(req)
+
+    def next_chunk(self) -> int:
+        rem = [r.max_new - len(r.out) for r in self.slots if r is not None]
+        if not rem:
+            return 0
+        cap = min(min(rem), self.max_chunk)
+        t = 1
+        while t * 2 <= cap:
+            t *= 2
+        return t
+
+    def _make_decode(self, n_steps: int):
+        cfg = self.cfg
+
+        def chunk(params, cache, last_tok, pos, active, key):
+            def step(carry, t):
+                cache, tok, pos = carry
+                k = None if key is None else jax.random.fold_in(key, t)
+                logits, new_cache = decode_step(
+                    params, cfg, tok, dict(cache, pos=pos), rng=k
+                )
+                nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                nxt = jnp.where(active, nxt, tok)
+                new_pos = jnp.where(active, pos + 1, pos)
+                new_cache.pop("pos")
+                return (new_cache, nxt, new_pos), nxt
+
+            (cache, tok, pos), toks = jax.lax.scan(
+                step, (cache, last_tok, pos), jnp.arange(n_steps)
+            )
+            return cache, tok, pos, toks.T  # (slots, T)
+
+        return jax.jit(chunk)
+
+    def decode_chunk(self, n_steps: Optional[int] = None) -> np.ndarray:
+        if n_steps is None:
+            n_steps = self.next_chunk()
+        if n_steps <= 0:
+            return np.zeros((self.batch_slots, 0), np.int32)
+        fn = self._decode_fns.get(n_steps)
+        if fn is None:
+            fn = self._decode_fns[n_steps] = self._make_decode(n_steps)
+        active = jnp.asarray(
+            np.array([s is not None for s in self.slots]))
+        self.cache, self.last_token, self.pos, toks = fn(
+            self.params, self.cache, self.last_token, self.pos, active,
+            self._next_key(),
+        )
+        block = np.asarray(toks)
+        self.decode_calls += 1
+        self.decode_steps += n_steps
+        self.host_transfer_bytes += block.nbytes
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            take = min(n_steps, req.max_new - len(req.out))
+            req.out.extend(int(t) for t in block[i, :take])
+            if len(req.out) >= req.max_new:
+                self._retire(i)
+        return block
+
+
+def _kv_leaves(tree, prefix=""):
+    """Yield (name, leaf) for attention KV leaves ("k"/"v") in a cache tree."""
+    if isinstance(tree, dict):
+        for key, sub in tree.items():
+            if key in ("k", "v", "pk", "pv") and hasattr(sub, "size"):
+                yield f"{prefix}{key}", sub
+            elif isinstance(sub, dict):
+                yield from _kv_leaves(sub, f"{prefix}{key}.")
+
+
+def drive_engine(engine, requests: List[Request], sample=None) -> List[Request]:
+    """Bench drive loop shared by both engines (same admit_pending /
+    decode_chunk / finished interface); ``sample`` observes the engine after
+    every decode chunk (KV utilization)."""
+    pending = list(requests)
+    while pending or engine.active:
+        engine.admit_pending(pending)
+        engine.decode_chunk()
+        if sample is not None:
+            sample(engine)
+    return engine.finished
+
+
+# ---------------------------------------------------------------------------
 # harness
 # ---------------------------------------------------------------------------
 
@@ -183,6 +424,58 @@ def _ttft_ms(reqs) -> float:
     return 1e3 * float(np.mean(vals)) if vals else float("nan")
 
 
+class _KVSampler:
+    """Samples KV bytes per token resident in an active slot after every
+    decode chunk (the utilization signal paging is supposed to fix)."""
+
+    def __init__(self):
+        self.samples: List[float] = []
+
+    def __call__(self, engine):
+        live = engine.live_tokens()
+        if live > 0:
+            self.samples.append(engine.kv_bytes_in_use() / live)
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.samples)) if self.samples else float("nan")
+
+
+def _run_engine(engine, cfg, lens, n_requests):
+    # the engine object is reused across warmup + measurement so its jit
+    # caches stay warm; the perf counters and the finished list restart per
+    # run (serve_* return engine.finished - a stale list would count prior
+    # runs' tokens against this run's wall time)
+    engine.decode_calls = engine.decode_steps = 0
+    engine.host_transfer_bytes = 0
+    engine.prefill_calls = engine.prefill_rows = 0
+    engine.finished = []
+    reqs = _mk_requests(cfg, lens, n_requests)
+    sampler = _KVSampler()
+    t0 = time.perf_counter()
+    out = drive_engine(engine, reqs, sample=sampler)
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out) for r in out)
+    steps = max(engine.decode_steps, 1)
+    return {
+        "wall_s": round(dt, 3),
+        "tok_s": round(tokens / dt, 1) if dt > 0 else float("nan"),
+        "ttft_ms": round(_ttft_ms(out), 1),
+        "tokens": tokens,
+        "host_syncs_per_token": round(engine.decode_calls / steps, 3),
+        "sync_bytes_per_token": round(
+            engine.host_transfer_bytes / max(tokens, 1), 1),
+        # only the (slots, T) int32 token block leaves the fused scan
+        "jit_out_bytes_per_tick": round(
+            engine.host_transfer_bytes / max(engine.decode_steps, 1), 1),
+        "decode_chunks": engine.decode_calls,
+        "decode_steps": engine.decode_steps,
+        "prefill_calls": engine.prefill_calls,
+        "prefill_rows": engine.prefill_rows,
+        "kv_bytes_per_active_token": round(sampler.mean, 1),
+    }
+
+
 def _run_wave(cfg, rng, cache_len, n_requests):
     server = WaveServer(cfg, init_params(jax.random.PRNGKey(0), cfg),
                         BATCH, cache_len, rng=rng)
@@ -203,69 +496,64 @@ def _run_wave(cfg, rng, cache_len, n_requests):
     }
 
 
-def _run_engine(cfg, rng, cache_len, lens, n_requests):
-    engine = Engine(cfg, init_params(jax.random.PRNGKey(0), cfg),
-                    BATCH, cache_len, rng=rng, max_chunk=GEN)
-    reqs = _mk_requests(cfg, lens, n_requests)
-    t0 = time.perf_counter()
-    out = serve(engine, reqs)
-    dt = time.perf_counter() - t0
-    tokens = sum(len(r.out) for r in out)
-    steps = max(engine.decode_steps, 1)
-    return {
-        "wall_s": round(dt, 3),
-        "tok_s": round(tokens / dt, 1) if dt > 0 else float("nan"),
-        "ttft_ms": round(_ttft_ms(out), 1),
-        "tokens": tokens,
-        "host_syncs_per_token": round(engine.decode_calls / steps, 3),
-        "sync_bytes_per_token": round(
-            engine.host_transfer_bytes / max(tokens, 1), 1),
-        # only the (slots, T) int32 token block leaves the fused scan
-        "jit_out_bytes_per_tick": round(
-            engine.host_transfer_bytes / max(engine.decode_steps, 1), 1),
-        "decode_chunks": engine.decode_calls,
-        "decode_steps": engine.decode_steps,
-    }
+def _engines_for(cfg, rng, cache_len):
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cont = ContiguousEngine(cfg, params, BATCH, cache_len, rng=rng,
+                            max_chunk=GEN)
+    paged = Engine(cfg, params, BATCH, cache_len, rng=rng, max_chunk=GEN)
+    return cont, paged
 
 
 def bench_records() -> List[dict]:
     records: List[dict] = []
-    cache_len = 2 * PROMPT_LEN + GEN + 8  # covers the pow2 bucket (16)
+    # mixed workload: contiguous must size every slot for the longest prompt
+    max_bucket = max(prefill_bucket(l, True, 10**9) for l in MIXED_LENS)
+    cache_len = max_bucket + GEN + 8
     for mode, n_requests in MODES.items():
         cfg = _mk_cfg(mode)
         rng = jax.random.PRNGKey(7) if mode else None
         meta = {"bench": "serve", "arch": ARCH, "mode": mode or "digital",
                 "slots": BATCH, "requests": n_requests,
-                "prompt_len": PROMPT_LEN, "gen": GEN}
-        # warmup both paths (compile time excluded, as in kernel_bench)
-        _run_wave(cfg, rng, cache_len, WARMUP_REQUESTS)
-        _run_engine(cfg, rng, cache_len, [PROMPT_LEN], WARMUP_REQUESTS)
-        wave = _run_wave(cfg, rng, cache_len, n_requests)
-        eng = _run_engine(cfg, rng, cache_len, [PROMPT_LEN], n_requests)
-        records.append({**meta, "config": "wave_baseline", **wave})
-        records.append({**meta, "config": "engine", **eng})
+                "prompt_lens": MIXED_LENS[:n_requests], "gen": GEN}
+        # warmup both engines (compile time excluded, as in kernel_bench)
+        cont, paged = _engines_for(cfg, rng, cache_len)
+        _run_engine(cont, cfg, MIXED_LENS, n_requests)
+        _run_engine(paged, cfg, MIXED_LENS, n_requests)
+        # best-of-REPEATS per engine: CPU wall times on shared boxes swing
+        # ~2x run to run; the structural counters are identical across runs
+        cont_rec = max(
+            (_run_engine(cont, cfg, MIXED_LENS, n_requests)
+             for _ in range(REPEATS)), key=lambda r: r["tok_s"])
+        paged_rec = max(
+            (_run_engine(paged, cfg, MIXED_LENS, n_requests)
+             for _ in range(REPEATS)), key=lambda r: r["tok_s"])
+        records.append({**meta, "config": "contiguous_engine", **cont_rec})
+        records.append({**meta, "config": "paged_engine", **paged_rec})
         records.append({
             **meta, "bench": "serve_summary",
-            "speedup_tok_s": round(eng["tok_s"] / wave["tok_s"], 2)
-            if wave["tok_s"] else float("nan"),
-            "ttft_ratio": round(eng["ttft_ms"] / wave["ttft_ms"], 2)
-            if wave["ttft_ms"] else float("nan"),
-            "jit_out_bytes_per_tick_before": wave["jit_out_bytes_per_tick"],
-            "jit_out_bytes_per_tick_after": eng["jit_out_bytes_per_tick"],
-            "host_syncs_per_token_before": wave["host_syncs_per_token"],
-            "host_syncs_per_token_after": eng["host_syncs_per_token"],
+            "speedup_tok_s": round(paged_rec["tok_s"] / cont_rec["tok_s"], 2)
+            if cont_rec["tok_s"] else float("nan"),
+            "ttft_ratio": round(paged_rec["ttft_ms"] / cont_rec["ttft_ms"], 2)
+            if cont_rec["ttft_ms"] else float("nan"),
+            "kv_reduction": round(
+                cont_rec["kv_bytes_per_active_token"]
+                / paged_rec["kv_bytes_per_active_token"], 2),
+            "kv_bytes_per_active_token_before":
+                cont_rec["kv_bytes_per_active_token"],
+            "kv_bytes_per_active_token_after":
+                paged_rec["kv_bytes_per_active_token"],
+            "prefill_calls_before": cont_rec["prefill_calls"],
+            "prefill_calls_after": paged_rec["prefill_calls"],
         })
-    # unequal prompt lengths in one batch: the wave server cannot run this
-    # shape at all (scalar cache position => admission waves)
+    # seed wave server reference (equal prompts - it cannot run mixed lengths)
     cfg = _mk_cfg(None)
-    lens = [5, 9, 12, 17]
-    cache_len = 32 + GEN + 8
-    _run_engine(cfg, None, cache_len, lens, len(lens))  # warm every bucket
-    eng = _run_engine(cfg, None, cache_len, lens, REQUESTS)
+    wave_cache_len = 2 * PROMPT_LEN + GEN + 8
+    _run_wave(cfg, None, wave_cache_len, WARMUP_REQUESTS)
+    wave = _run_wave(cfg, None, wave_cache_len, REQUESTS)
     records.append({"bench": "serve", "arch": ARCH, "mode": "digital",
-                    "config": "engine_unequal_prompts", "slots": BATCH,
-                    "requests": REQUESTS, "prompt_lens": lens, "gen": GEN,
-                    **eng})
+                    "config": "wave_baseline", "slots": BATCH,
+                    "requests": REQUESTS, "prompt_len": PROMPT_LEN,
+                    "gen": GEN, **wave})
     return records
 
 
@@ -276,20 +564,23 @@ def rows_from_records(records: List[dict]) -> List[Row]:
         if r["bench"] == "serve_summary":
             rows.append((
                 f"serve/summary_{tag}",
-                r["speedup_tok_s"],
-                f"tok/s speedup; jit_out_B/tick "
-                f"{r['jit_out_bytes_per_tick_before']}->"
-                f"{r['jit_out_bytes_per_tick_after']} "
-                f"syncs/tok {r['host_syncs_per_token_before']}->"
-                f"{r['host_syncs_per_token_after']}",
+                r["kv_reduction"],
+                f"kv B/active-tok reduction "
+                f"{r['kv_bytes_per_active_token_before']}->"
+                f"{r['kv_bytes_per_active_token_after']}; "
+                f"tok/s ratio {r['speedup_tok_s']} "
+                f"prefill calls {r['prefill_calls_before']}->"
+                f"{r['prefill_calls_after']}",
             ))
         else:
+            kv = r.get("kv_bytes_per_active_token")
             rows.append((
                 f"serve/{r['config']}_{tag}",
                 r["tok_s"],
                 f"tok/s; ttft={r['ttft_ms']}ms "
                 f"sync_B/tok={r['sync_bytes_per_token']} "
-                f"jit_out_B/tick={r['jit_out_bytes_per_tick']}",
+                + (f"kv_B/active_tok={kv}" if kv is not None else
+                   f"jit_out_B/tick={r['jit_out_bytes_per_tick']}"),
             ))
     return rows
 

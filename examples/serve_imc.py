@@ -2,16 +2,24 @@
 (deliverable (b), serving flavor): the same weights served digitally and at
 two analog design points, reporting output agreement vs the digital baseline.
 
+The prompt set is deliberately MIXED short/long: the paged KV cache admits a
+4-token and a 48-token request into the same batch while only holding blocks
+for the tokens each actually keeps (a contiguous layout would size all four
+slots for the 48-token worst case).
+
 Run:  PYTHONPATH=src python examples/serve_imc.py
 """
 import numpy as np
 
 from repro.launch import serve as serve_mod
 
+MIXED_PROMPT_LENS = "4,24,48,6,8,40,5,16"
+
 
 def run(imc_mode=None, v_wl=0.7):
     args = ["--arch", "musicgen-medium", "--smoke", "--batch", "4",
-            "--requests", "8", "--prompt-len", "24", "--gen", "12"]
+            "--requests", "8", "--prompt-lens", MIXED_PROMPT_LENS,
+            "--gen", "12"]
     if imc_mode:
         args += ["--imc-mode", imc_mode, "--imc-vwl", str(v_wl)]
     return serve_mod.main(args)

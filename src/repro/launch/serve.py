@@ -1,38 +1,57 @@
-"""Device-resident continuous-batching serve engine: prefill + fused decode,
-optionally executing every matmul through the IMC simulation (the paper's
-technique in deployment position).
+"""Device-resident continuous-batching serve engine with a PAGED KV cache:
+batched bucketed prefill + fused decode, optionally executing every matmul
+through the IMC simulation (the paper's technique in deployment position).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
       --batch 4 --prompt-len 32 --gen 16 --imc-mode imc_analytic
 
 Engine design (the decode hot loop never leaves the device):
 
+  paged KV cache       global-attention K/V lives in a shared block pool
+                       (num_blocks, block, Hkv, hd) indexed through a
+                       device-resident per-slot block table (slots,
+                       max_blocks).  A host-side free-list allocator
+                       (``BlockAllocator``) hands each request exactly
+                       ceil((prompt + max_new - 1) / block) blocks, so mixed
+                       short/long traffic holds KV memory proportional to the
+                       tokens it actually keeps, not slots x longest-request.
+                       Physical block 0 is a reserved garbage block: block
+                       tables point to it for unallocated logical blocks and
+                       inactive rows' decode writes are routed to it (a
+                       retired slot's stale table may reference blocks the
+                       allocator already handed to another request).
+                       Sliding-window rings (bounded at the window span) and
+                       recurrent states (fixed size) stay contiguous.
+  batched prefill      the FIFO prefix of pending requests sharing one
+                       bucket is admitted as ONE (R, bucket) prefill call
+                       (R padded to a power of two: one compile per
+                       (R, bucket), dummy rows dropped via out-of-bounds
+                       scatter), followed by ONE jitted multi-slot insert
+                       that writes each row's prompt K/V into its allocated
+                       blocks and its block-table row.  Prefix-only grouping
+                       keeps strict arrival order (no short prompt overtakes
+                       an earlier long one).  MoE patterns prefill one
+                       request at a time (expert capacity is batch-coupled,
+                       so batching would change routing vs the solo
+                       reference).
   per-slot positions   the decode cache carries a (slots,) position vector,
-                       so every slot sits at its own sequence depth - requests
-                       with unequal prompt lengths are admitted into one batch
-                       the moment a slot frees (true continuous batching, no
-                       position-synchronized waves).
+                       so every slot sits at its own sequence depth.
   fused decode scan    decode runs T steps at a time inside ONE jitted call
                        (``jax.lax.scan`` over the step), with slot state
                        (last token, position, active mask) and greedy argmax
                        resident on device.  Exactly one (slots, T) int32 block
-                       crosses to the host per chunk - the per-token logits
-                       readback + blocking sync of a Python-tick loop is gone.
-                       T is the largest power of two that no active request
-                       overruns, so chunking never generates waste tokens and
-                       the jit cache stays O(log max_chunk).
+                       crosses to the host per chunk.  T is the largest power
+                       of two that no active request overruns.
   bucketed prefill     prompts are right-padded to power-of-two length buckets
                        (one compile per bucket, not per length); causality
                        isolates the pad positions, logits are gathered at each
-                       row's true last position, and sliding-window ring
-                       caches are packed per-row from the true tail.  The slot
-                       cache-insert is a single jitted dynamic_update_slice
-                       scatter over the cache tree.  Recurrent (ssm/rglru) and
+                       row's true last position.  Recurrent (ssm/rglru) and
                        MoE patterns use exact-length prefill instead: a
                        recurrent state would integrate the pad garbage, and
                        pad tokens would contend for expert capacity.
 
-Greedy sampling.  Finished sequences free their slot for the next request.
+Greedy sampling.  Finished sequences free their slot (and blocks) for the
+next request.
 """
 from __future__ import annotations
 
@@ -40,18 +59,19 @@ import argparse
 import dataclasses
 import logging
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models import (decode_step, init_paged_cache, init_params, prefill)
 
 log = logging.getLogger("repro.serve")
 
 MIN_BUCKET = 8
+DEFAULT_BLOCK = 8  # tokens per KV block; divides every pow2 bucket >= MIN_BUCKET
 
 
 @dataclasses.dataclass
@@ -89,26 +109,89 @@ def prefill_bucket(length: int, bucketable: bool, cache_len: int) -> int:
     return min(p, cache_len) if cache_len >= length else p
 
 
-class Engine:
-    """Fixed-slot continuous-batching engine with a fused decode scan.
+class BlockAllocator:
+    """Free-list allocator over the physical KV block pool.
 
-    Host-side state is bookkeeping only (which request owns which slot);
-    everything the decode loop touches - cache, per-slot positions, last
-    tokens - lives on device between jitted calls.
+    Contract (pinned by the hypothesis property tests):
+      - block 0 is reserved (the garbage block) and is never handed out;
+      - ``alloc(n)`` returns n distinct blocks none of which is currently
+        allocated elsewhere, or None (caller must not admit) - it never
+        partially allocates;
+      - ``free(blocks)`` returns blocks to the pool; freed blocks are
+        immediately reusable;
+      - ``free_count + sum(len(owned))`` is conserved at ``num_blocks - 1``.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 1:
+            raise ValueError("need at least the reserved garbage block")
+        self.num_blocks = num_blocks
+        # LIFO free list: recently freed (cache-warm) blocks are reused first
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._allocated: set = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return len(self._allocated)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        blocks = [self._free.pop() for _ in range(n)]
+        self._allocated.update(blocks)
+        return blocks
+
+    def free(self, blocks: List[int]):
+        for b in blocks:
+            if b not in self._allocated:
+                raise ValueError(f"double free / foreign block {b}")
+            self._allocated.remove(b)
+            self._free.append(b)
+
+
+class Engine:
+    """Fixed-slot continuous-batching engine: paged KV cache, batched
+    bucketed prefill, fused decode scan.
+
+    Host-side state is bookkeeping only (which request owns which slot and
+    which physical blocks); everything the decode loop touches - block pools,
+    block tables, per-slot positions, last tokens - lives on device between
+    jitted calls.
     """
 
     def __init__(self, cfg, params, batch_slots: int, cache_len: int,
-                 rng: Optional[jax.Array] = None, max_chunk: int = 8):
+                 rng: Optional[jax.Array] = None, max_chunk: int = 8,
+                 block_size: int = DEFAULT_BLOCK,
+                 kv_blocks: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.batch_slots = batch_slots
-        self.cache_len = cache_len
+        self.block = block_size
+        self.max_blocks = -(-cache_len // block_size)
+        # logical per-request capacity, rounded up to whole blocks
+        self.cache_len = self.max_blocks * block_size
         self.max_chunk = max_chunk
         self.rng = rng
         self.bucketable = not needs_exact_prefill(cfg)
+        # MoE expert capacity couples rows of a batch: batched prefill would
+        # route differently than the solo reference, so keep R = 1 there
+        self.batch_prefill = cfg.n_experts == 0
+        kinds = tuple(cfg.pattern) + tuple(cfg.tail_kinds)
+        self.has_paged = "attn" in kinds
+        if kv_blocks is None:
+            # full provisioning: admission can never stall on blocks
+            kv_blocks = batch_slots * self.max_blocks + 1
+        self.alloc = BlockAllocator(kv_blocks if self.has_paged else 1)
 
         self.slots: List[Optional[Request]] = [None] * batch_slots
-        cache = init_cache(cfg, batch_slots, cache_len)
+        self._slot_blocks: List[List[int]] = [[] for _ in range(batch_slots)]
+        cache = init_paged_cache(cfg, batch_slots, self.cache_len,
+                                 kv_blocks if self.has_paged else 1,
+                                 block_size)
         cache.pop("pos")
         self.cache = cache  # blocks/tail only: positions are engine state
         self.pos = jnp.zeros((batch_slots,), jnp.int32)
@@ -119,10 +202,49 @@ class Engine:
         self.decode_calls = 0
         self.decode_steps = 0
         self.host_transfer_bytes = 0
+        self.prefill_calls = 0
+        self.prefill_rows = 0
 
-        self._prefill_fns: Dict[int, object] = {}
-        self._decode_fns: Dict[int, object] = {}
+        self._prefill_fns: Dict[Tuple[int, int], Any] = {}
+        self._decode_fns: Dict[int, Any] = {}
         self._insert_fn = jax.jit(self._insert_impl)
+        self._block_bytes, self._fixed_kv_bytes = self._kv_accounting()
+
+    # -- kv memory accounting --------------------------------------------------
+    def _kv_accounting(self) -> Tuple[int, int]:
+        """(bytes per physical block summed over paged layers, bytes of the
+        always-allocated contiguous KV leaves: sliding-window rings)."""
+        block_bytes = 0
+        fixed = 0
+
+        def walk(sub):
+            nonlocal block_bytes, fixed
+            if isinstance(sub, dict) and "pk" in sub:
+                for leaf in (sub["pk"], sub["pv"]):
+                    # (NB, bs, H, hd) or stacked (n_full, NB, bs, H, hd)
+                    per_block = leaf.size // leaf.shape[-4] * leaf.dtype.itemsize
+                    block_bytes += per_block
+                return
+            if isinstance(sub, dict):
+                for key, v in sub.items():
+                    if key in ("k", "v"):
+                        fixed += v.size * v.dtype.itemsize
+                    else:
+                        walk(v)
+
+        walk({"blocks": self.cache.get("blocks", {}),
+              "tail": self.cache.get("tail", {})})
+        return block_bytes, fixed
+
+    def kv_bytes_in_use(self) -> int:
+        """Bytes of KV memory currently backing live tokens: allocated blocks
+        across every paged layer plus the fixed ring caches."""
+        return self._fixed_kv_bytes + self.alloc.used_count * self._block_bytes
+
+    def live_tokens(self) -> int:
+        """Tokens currently resident in active slots' caches."""
+        return sum(len(r.prompt) + len(r.out) for r in self.slots
+                   if r is not None)
 
     # -- rng ------------------------------------------------------------------
     def _next_key(self):
@@ -136,44 +258,125 @@ class Engine:
     def active(self) -> int:
         return sum(1 for s in self.slots if s is not None)
 
-    def admit(self, req: Request) -> bool:
-        free = next((i for i, s in enumerate(self.slots) if s is None), None)
-        if free is None:
-            return False
-        if req.t_submit is None:
-            req.t_submit = time.perf_counter()
+    def _bucket(self, req: Request) -> int:
+        return prefill_bucket(len(req.prompt), self.bucketable, self.cache_len)
+
+    def _blocks_needed(self, req: Request) -> int:
+        if not self.has_paged:
+            return 0
+        # decode writes K/V at positions len .. len + max_new - 2
+        return -(-(len(req.prompt) + req.max_new - 1) // self.block)
+
+    def _fits(self, req: Request) -> bool:
+        return (len(req.prompt) + req.max_new - 1 <= self.cache_len
+                and self._blocks_needed(req) <= self.alloc.num_blocks - 1)
+
+    def _check_fits(self, req: Request):
         length = len(req.prompt)
-        # decode writes K/V at positions length .. length + max_new - 2
         if length + req.max_new - 1 > self.cache_len:
             raise ValueError(
                 f"prompt ({length}) + max_new ({req.max_new}) exceeds "
                 f"cache_len ({self.cache_len})")
-        bucket = prefill_bucket(length, self.bucketable, self.cache_len)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :length] = req.prompt
-        pf = self._prefill_fns.get(bucket)
+        if self._blocks_needed(req) > self.alloc.num_blocks - 1:
+            raise ValueError(
+                f"request {req.rid} needs {self._blocks_needed(req)} KV "
+                f"blocks; pool has {self.alloc.num_blocks - 1}")
+
+    def admit(self, req: Request) -> bool:
+        """Single-request admission (compat shim over the batched path)."""
+        pending = [req]
+        return len(self.admit_pending(pending)) == 1
+
+    def admit_pending(self, pending: List[Request]) -> List[Request]:
+        """Admit as many pending requests as slots + KV blocks allow, one
+        batched (R, bucket) prefill call per group.  A group is the FIFO
+        PREFIX of the queue sharing the head's bucket: strict arrival order
+        is preserved (grouping across later same-bucket requests would let
+        short prompts overtake an earlier long one and inflate its TTFT).
+        Removes admitted requests from ``pending`` and returns them."""
+        admitted: List[Request] = []
+        while pending:
+            free_slots = [i for i, s in enumerate(self.slots) if s is None]
+            if not free_slots:
+                break
+            self._check_fits(pending[0])
+            bucket = self._bucket(pending[0])
+            group: List[Request] = []
+            reserved = 0
+            limit = len(free_slots) if self.batch_prefill else 1
+            for r in pending:
+                if len(group) >= limit or self._bucket(r) != bucket:
+                    break
+                if not self._fits(r):
+                    # an oversized non-head request ends the prefix BEFORE
+                    # any allocation; it raises via _check_fits when it
+                    # reaches the head (nothing admitted behind it leaks)
+                    break
+                need = self._blocks_needed(r)
+                if reserved + need > self.alloc.free_count:
+                    break
+                group.append(r)
+                reserved += need
+            if not group:
+                break  # head-of-line request waits for blocks to free
+            self._admit_group(group, free_slots[: len(group)], bucket)
+            del pending[: len(group)]
+            admitted.extend(group)
+        return admitted
+
+    def _admit_group(self, group: List[Request], slot_ids: List[int],
+                     bucket: int):
+        now = time.perf_counter()
+        r_real = len(group)
+        r_pad = 1
+        while r_pad < r_real:
+            r_pad *= 2
+        toks = np.zeros((r_pad, bucket), np.int32)
+        true_len = np.ones((r_pad,), np.int32)
+        # dummy rows scatter to slot index == batch_slots: out of bounds,
+        # dropped by the insert's mode="drop" scatters
+        slot_vec = np.full((r_pad,), self.batch_slots, np.int32)
+        bt_rows = np.zeros((r_pad, self.max_blocks), np.int32)
+        for r, req in enumerate(group):
+            if req.t_submit is None:
+                req.t_submit = now
+            length = len(req.prompt)
+            toks[r, :length] = req.prompt
+            true_len[r] = length
+            slot_vec[r] = slot_ids[r]
+            blocks = self.alloc.alloc(self._blocks_needed(req))
+            assert blocks is not None  # reserved in admit_pending
+            self._slot_blocks[slot_ids[r]] = blocks
+            bt_rows[r, : len(blocks)] = blocks
+        pf = self._prefill_fns.get((r_pad, bucket))
         if pf is None:
-            pf = self._prefill_fns[bucket] = self._make_prefill()
+            pf = self._prefill_fns[(r_pad, bucket)] = self._make_prefill()
         tok0, cache1 = pf(self.params, jnp.asarray(toks),
-                          jnp.asarray([length], jnp.int32), self._next_key())
+                          jnp.asarray(true_len), self._next_key())
         self.cache, self.last_token, self.pos = self._insert_fn(
             self.cache, {k: v for k, v in cache1.items() if k != "pos"},
-            jnp.asarray(free, jnp.int32), tok0[0],
-            jnp.asarray(length, jnp.int32), self.last_token, self.pos,
+            jnp.asarray(slot_vec), jnp.asarray(bt_rows), tok0,
+            jnp.asarray(true_len), self.last_token, self.pos,
         )
-        self.slots[free] = req
-        req.out.append(int(tok0[0]))  # 4-byte sync, once per request (TTFT)
-        req.t_first = time.perf_counter()
-        if len(req.out) >= req.max_new:
-            self._retire(free)
-        return True
+        self.prefill_calls += 1
+        self.prefill_rows += r_real
+        tok0_host = np.asarray(tok0)  # one sync per GROUP (TTFT for all rows)
+        t_first = time.perf_counter()
+        for r, req in enumerate(group):
+            self.slots[slot_vec[r]] = req
+            req.out.append(int(tok0_host[r]))
+            req.t_first = t_first
+            if len(req.out) >= req.max_new:
+                self._retire(slot_vec[r])
 
     def _make_prefill(self):
-        cfg, cache_len, bucketable = self.cfg, self.cache_len, self.bucketable
+        cfg, bucketable = self.cfg, self.bucketable
 
         def pf(params, toks, true_len, key):
+            # cache_len == bucket: the insert redistributes rows into blocks,
+            # so prefill never materializes the full-length contiguous cache
             logits, cache1 = prefill(
-                params, cfg, toks, cache_len=cache_len, rng=key,
+                params, cfg, toks, cache_len=toks.shape[1], rng=key,
                 true_len=true_len if bucketable else None,
             )
             tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
@@ -181,32 +384,87 @@ class Engine:
 
         return jax.jit(pf)
 
-    def _insert_impl(self, cache, cache1, slot, tok0, length, last_token, pos):
-        n_slots = self.batch_slots
+    # -- multi-slot cache insert ----------------------------------------------
+    def _insert_impl(self, cache, cache1, slot_vec, bt_rows, tok0, true_len,
+                     last_token, pos):
+        """One jitted scatter of a whole prefill group into the engine cache:
+        paged layers write each row's prompt K/V blocks into the pool and its
+        block-table row; contiguous leaves (rings, recurrent states) scatter
+        along the slot axis.  Out-of-bounds slot ids (dummy pad rows) drop."""
+        bs = self.block
 
-        def put(batched, single):
-            if getattr(batched, "ndim", 0) == 0:
-                return batched
-            # slot axis is the batch axis: blocks (n_cycles, B, ...) / (B, ...)
-            for axis in range(batched.ndim):
-                if (batched.shape[axis] == n_slots
-                        and single.shape[axis] == 1):
-                    starts = [0] * batched.ndim
-                    starts[axis] = slot
-                    return jax.lax.dynamic_update_slice(
-                        batched, single.astype(batched.dtype), tuple(starts)
-                    )
-            return batched
+        def put_paged(eng: Dict[str, Any], pref: Dict[str, Any], stacked: bool):
+            seq_ax = 2 if stacked else 1
+            out = dict(eng)
+            bt = eng["bt"]
+            if stacked:
+                out["bt"] = bt.at[:, slot_vec].set(bt_rows, mode="drop")
+            else:
+                out["bt"] = bt.at[slot_vec].set(bt_rows, mode="drop")
+            for pool_key, kv_key in (("pk", "k"), ("pv", "v")):
+                pool, src = eng[pool_key], pref[kv_key]
+                s = src.shape[seq_ax]
+                s_pad = -(-s // bs) * bs
+                pads = [(0, 0)] * src.ndim
+                pads[seq_ax] = (0, s_pad - s)
+                src = jnp.pad(src, pads).astype(pool.dtype)
+                nbb = s_pad // bs
+                # logical block j of row r -> physical block bt_rows[r, j]
+                # (0 = garbage for blocks past the row's allocation: pad-only
+                # bucket tails are discarded, never read)
+                dest = bt_rows[:, :nbb].reshape(-1)
+                if stacked:
+                    nf, r = src.shape[0], src.shape[1]
+                    src = src.reshape((nf, r * nbb, bs) + src.shape[3:])
+                    out[pool_key] = pool.at[:, dest].set(src)
+                else:
+                    r = src.shape[0]
+                    src = src.reshape((r * nbb, bs) + src.shape[2:])
+                    out[pool_key] = pool.at[dest].set(src)
+            return out
 
-        new_cache = jax.tree_util.tree_map(put, cache, cache1)
-        return (new_cache, last_token.at[slot].set(tok0),
-                pos.at[slot].set(length))
+        def put_leaf(eng, pref, stacked: bool):
+            if getattr(eng, "ndim", 0) == 0:
+                return eng
+            slot_ax = 1 if stacked else 0
+            # right-pad short leaves (a prefill ring narrower than the
+            # engine's span is identity-layout: bucket < window)
+            pads = [(0, 0)] * pref.ndim
+            for ax in range(pref.ndim):
+                if ax != slot_ax:
+                    pads[ax] = (0, eng.shape[ax] - pref.shape[ax])
+            src = jnp.pad(pref, pads).astype(eng.dtype)
+            if stacked:
+                return eng.at[:, slot_vec].set(src, mode="drop")
+            return eng.at[slot_vec].set(src, mode="drop")
+
+        def walk(eng, pref, stacked: bool):
+            if isinstance(eng, dict) and "pk" in eng:
+                return put_paged(eng, pref, stacked)
+            if isinstance(eng, dict):
+                return {k: walk(v, pref[k], stacked) for k, v in eng.items()}
+            return put_leaf(eng, pref, stacked)
+
+        new_cache = {}
+        for key, sub in cache.items():
+            stacked = key == "blocks"
+            new_cache[key] = walk(sub, cache1[key], stacked)
+        return (
+            new_cache,
+            last_token.at[slot_vec].set(tok0, mode="drop"),
+            pos.at[slot_vec].set(true_len, mode="drop"),
+        )
 
     def _retire(self, i: int):
         req = self.slots[i]
         req.done = True
         self.slots[i] = None
         self.finished.append(req)
+        if self._slot_blocks[i]:
+            # the stale device block table keeps pointing at these blocks;
+            # that is safe because inactive rows write to the garbage block
+            self.alloc.free(self._slot_blocks[i])
+            self._slot_blocks[i] = []
 
     # -- fused decode ----------------------------------------------------------
     def next_chunk(self) -> int:
@@ -228,7 +486,8 @@ class Engine:
                 cache, tok, pos = carry
                 k = None if key is None else jax.random.fold_in(key, t)
                 logits, new_cache = decode_step(
-                    params, cfg, tok, dict(cache, pos=pos), rng=k
+                    params, cfg, tok, dict(cache, pos=pos), rng=k,
+                    active=active,
                 )
                 nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
                 nxt = jnp.where(active, nxt, tok)
@@ -279,10 +538,14 @@ def serve(engine: Engine, requests: List[Request]) -> List[Request]:
     pending = list(requests)
     done_mark = len(engine.finished)
     while pending or engine.active:
-        while pending and engine.admit(pending[0]):
-            req = pending.pop(0)
+        admitted = engine.admit_pending(pending)
+        for req in admitted:
             log.info("admitted request %d len=%d (active=%d)",
                      req.rid, len(req.prompt), engine.active)
+        if pending and not engine.active and not admitted:
+            raise RuntimeError(
+                "pending requests cannot be admitted into an idle engine "
+                "(slots or KV block pool too small)")
         engine.decode_chunk()
         for r in engine.finished[done_mark:]:
             log.info("finished request %d: %d tokens", r.rid, len(r.out))
@@ -304,6 +567,11 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--chunk", type=int, default=8,
                     help="max fused decode steps per jitted scan call")
+    ap.add_argument("--block", type=int, default=DEFAULT_BLOCK,
+                    help="tokens per paged-KV block")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="physical KV pool size in blocks (default: full "
+                         "provisioning, slots * max_blocks + 1)")
     ap.add_argument("--imc-mode", default=None,
                     choices=[None, "fakequant", "imc_analytic",
                              "imc_bitserial"])
@@ -329,7 +597,8 @@ def main(argv=None):
     max_bucket = max(prefill_bucket(l, bucketable, 10**9) for l in lens)
     cache_len = max_bucket + args.gen + 8
     engine = Engine(cfg, params, args.batch, cache_len, rng=rng,
-                    max_chunk=args.chunk)
+                    max_chunk=args.chunk, block_size=args.block,
+                    kv_blocks=args.kv_blocks)
 
     rnp = np.random.default_rng(0)
     requests = [
@@ -347,9 +616,11 @@ def main(argv=None):
     ttft_ms = 1e3 * float(np.mean(ttfts)) if ttfts else float("nan")
     log.info(
         "served %d requests, %d tokens, %d fused chunks (%d steps), "
-        "%.1f tok/s, mean TTFT %.1f ms, %d host-transfer bytes",
+        "%d prefill calls (%d rows), %.1f tok/s, mean TTFT %.1f ms, "
+        "%d host-transfer bytes, %d KV blocks in pool",
         len(finished), total_tokens, engine.decode_calls,
-        engine.decode_steps, tok_s, ttft_ms, engine.host_transfer_bytes,
+        engine.decode_steps, engine.prefill_calls, engine.prefill_rows,
+        tok_s, ttft_ms, engine.host_transfer_bytes, engine.alloc.num_blocks,
     )
     return finished
 

@@ -3,6 +3,7 @@ from repro.models.model import (  # noqa: F401
     decode_step,
     forward,
     init_cache,
+    init_paged_cache,
     init_params,
     loss_fn,
     param_count,

@@ -342,20 +342,96 @@ def init_kv_cache(batch: int, cache_len: int, n_kv: int, head_dim: int, dtype):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def init_paged_kv_cache(batch: int, num_blocks: int, block_size: int,
+                        max_blocks: int, n_kv: int, head_dim: int, dtype):
+    """Paged KV cache: a shared block pool plus a per-slot block table.
+
+    ``pk``/``pv`` are the physical pools (num_blocks, block_size, Hkv, hd);
+    ``bt`` maps each slot's logical block j to a physical block id.  Physical
+    block 0 is the GARBAGE block: it is never allocated to a request, block
+    tables point to it for unallocated logical blocks, and inactive rows'
+    decode writes are routed to it (see ``attention_decode``).
+    """
+    shape = (num_blocks, block_size, n_kv, head_dim)
+    return {
+        "pk": jnp.zeros(shape, dtype),
+        "pv": jnp.zeros(shape, dtype),
+        "bt": jnp.zeros((batch, max_blocks), jnp.int32),
+    }
+
+
+def _decode_attend(params, x, q, k, v, valid, dims: AttnDims, imc, rng):
+    """Single-token attention over a (B, Skv, Hkv, hd) K/V view with a
+    (B, Skv) validity mask; shared by the contiguous and paged cache paths."""
+    b = x.shape[0]
+    hq, hkv, hd = dims.n_heads, dims.n_kv, dims.head_dim
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * dims.scale
+    if dims.softcap_val is not None:
+        s = dims.softcap_val * jnp.tanh(s / dims.softcap_val)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    # softmax over the (possibly model-axis-sharded) sequence dim: GSPMD emits
+    # the partial-max/sum + all-reduce flash-decode pattern automatically
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    ctx = ctx.reshape(b, 1, hq * hd).astype(x.dtype)
+    return linear(params["wo"], ctx, imc, rng)
+
+
+def _attention_decode_paged(params, x, cache, pos_b, dims: AttnDims, imc, rng,
+                            active):
+    """Paged decode: scatter the new K/V into the tail block, gather the
+    slot's K/V view through the block table.
+
+    Masked (invalid) lanes read garbage from unallocated blocks but contribute
+    exactly zero probability, so the gathered view reproduces the contiguous
+    layout token-for-token.  Rows with ``active == False`` write to garbage
+    block 0: a retired slot's stale table may point at physical blocks that
+    the allocator has already handed to another request.
+    """
+    assert dims.window is None, "paged KV caches are global-attention only"
+    b = x.shape[0]
+    positions = pos_b[:, None]
+    q, k_new, v_new = _project_qkv(params, x, dims, positions, imc, rng)
+    pk, pv, bt = cache["pk"], cache["pv"], cache["bt"]
+    block = pk.shape[1]
+    max_blocks = bt.shape[1]
+    rows = jnp.arange(b)
+    dest = bt[rows, jnp.clip(pos_b // block, 0, max_blocks - 1)]
+    if active is not None:
+        dest = jnp.where(active, dest, 0)
+    off = pos_b % block
+    pk = pk.at[dest, off].set(k_new[:, 0].astype(pk.dtype))
+    pv = pv.at[dest, off].set(v_new[:, 0].astype(pv.dtype))
+    s_kv = max_blocks * block
+    k = ws(pk[bt].reshape(b, s_kv, dims.n_kv, dims.head_dim), "kv_bshd")
+    v = ws(pv[bt].reshape(b, s_kv, dims.n_kv, dims.head_dim), "kv_bshd")
+    valid = jnp.arange(s_kv)[None, :] <= pos_b[:, None]
+    y = _decode_attend(params, x, q, k, v, valid, dims, imc, rng)
+    return y, {"pk": pk, "pv": pv, "bt": bt}
+
+
 def attention_decode(
     params,
     x,  # (B, 1, d)
-    cache,  # {"k","v"}: (B, Skv, Hkv, hd); ring buffer when window
+    cache,  # {"k","v"}: (B, Skv, Hkv, hd) (ring buffer when window), or a
+    #         paged {"pk","pv","bt"} block pool (global attention only)
     pos,  # int32 scalar OR (B,) per-slot vector: tokens already in the cache
     dims: AttnDims,
     imc: IMCConfig = DIGITAL,
     rng=None,
+    active=None,  # optional (B,) bool: rows allowed to write their K/V slot
 ):
     b = x.shape[0]
     # per-slot positions: a scalar broadcasts to the whole batch (wave-style
     # synchronized decode); a (B,) vector lets every slot sit at its own depth
     # (continuous batching with unequal prompt lengths)
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    if "pk" in cache:
+        return _attention_decode_paged(params, x, cache, pos_b, dims, imc,
+                                       rng, active)
     positions = pos_b[:, None]
     q, k_new, v_new = _project_qkv(params, x, dims, positions, imc, rng)
     s_kv = cache["k"].shape[1]
@@ -369,14 +445,6 @@ def attention_decode(
     v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
     k = ws(k, "kv_bshd")
     v = ws(v, "kv_bshd")
-
-    hq, hkv, hd = dims.n_heads, dims.n_kv, dims.head_dim
-    g = hq // hkv
-    qg = q.reshape(b, hkv, g, hd)
-    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32), k.astype(jnp.float32))
-    s = s * dims.scale
-    if dims.softcap_val is not None:
-        s = dims.softcap_val * jnp.tanh(s / dims.softcap_val)
     idx = jnp.arange(s_kv)
     if dims.window is not None:
         valid = jnp.where(
@@ -386,11 +454,5 @@ def attention_decode(
         )
     else:
         valid = idx[None, :] <= pos_b[:, None]
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    # softmax over the (possibly model-axis-sharded) sequence dim: GSPMD emits
-    # the partial-max/sum + all-reduce flash-decode pattern automatically
-    p = jax.nn.softmax(s, axis=-1)
-    ctx = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
-    ctx = ctx.reshape(b, 1, hq * hd).astype(x.dtype)
-    y = linear(params["wo"], ctx, imc, rng)
+    y = _decode_attend(params, x, q, k, v, valid, dims, imc, rng)
     return y, {"k": k, "v": v}

@@ -86,6 +86,29 @@ def init_cache(cfg: ArchConfig, batch: int, cache_len: int):
     return cache
 
 
+def init_paged_cache(cfg: ArchConfig, batch: int, cache_len: int,
+                     num_blocks: int, block_size: int):
+    """Like :func:`init_cache` but global-attention layers get a paged block
+    pool ({"pk","pv","bt"}) instead of a per-slot contiguous slice.  Every
+    paged layer shares the same block-table CONTENTS (allocation is identical
+    across layers); each carries its own copy so the cache tree stays
+    self-contained under scan-over-layers."""
+    dtype = dtype_of(cfg.dtype)
+    n_full = cfg.n_full_cycles
+    cache: Dict[str, Any] = {"blocks": {}, "pos": jnp.zeros((), jnp.int32)}
+    for pi, kind in enumerate(cfg.pattern):
+        one = tf.init_block_cache_paged(cfg, kind, batch, cache_len, dtype,
+                                        num_blocks, block_size)
+        cache["blocks"][f"p{pi}"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n_full,) + x.shape).copy(), one
+        )
+    for ti, kind in enumerate(cfg.tail_kinds):
+        cache.setdefault("tail", {})[f"t{ti}"] = tf.init_block_cache_paged(
+            cfg, kind, batch, cache_len, dtype, num_blocks, block_size
+        )
+    return cache
+
+
 # ---------------------------------------------------------------------------
 # embedding / head
 # ---------------------------------------------------------------------------
@@ -252,12 +275,16 @@ def decode_step(
     token,  # (B,) int32 - the most recent token
     cache,
     rng=None,
+    active=None,  # optional (B,) bool: rows allowed to write their KV slot
 ):
     """One decode step. Returns (logits (B, 1, V), new_cache).
 
     ``cache["pos"]`` may be a scalar (all slots synchronized) or a (B,)
     vector of per-slot positions (continuous batching); either way the
-    returned cache carries ``pos + 1`` with the same shape.
+    returned cache carries ``pos + 1`` with the same shape.  ``active``
+    matters only for paged caches: an inactive row's stale block table may
+    reference physical blocks reassigned to another request, so its K/V
+    write is routed to the garbage block.
     """
     b = token.shape[0]
     pos = cache["pos"]
@@ -272,7 +299,7 @@ def decode_step(
                 jax.random.fold_in(rng, pi), li
             )
             x, nc = tf.apply_block_decode(bp[f"p{pi}"], x, cfg, kind,
-                                          bc[f"p{pi}"], pos, r)
+                                          bc[f"p{pi}"], pos, r, active=active)
             new_cs[f"p{pi}"] = nc
         return x, new_cs
 
@@ -287,7 +314,7 @@ def decode_step(
             r = None if rng is None else jax.random.fold_in(rng, 10_000 + ti)
             x, nc = tf.apply_block_decode(
                 params["tail"][f"t{ti}"], x, cfg, kind, cache["tail"][f"t{ti}"],
-                pos, r,
+                pos, r, active=active,
             )
             new_tail[f"t{ti}"] = nc
         new_cache["tail"] = new_tail

@@ -96,6 +96,21 @@ def init_block_cache(cfg: ArchConfig, kind: str, batch: int, cache_len: int, dty
     raise ValueError(kind)
 
 
+def init_block_cache_paged(cfg: ArchConfig, kind: str, batch: int,
+                           cache_len: int, dtype, num_blocks: int,
+                           block_size: int):
+    """Paged variant: global-attention KV caches become block pools + block
+    tables; sliding-window rings (already bounded at the window span) and
+    recurrent states (fixed-size per slot) keep their contiguous layout."""
+    if kind == "attn":
+        max_blocks = -(-cache_len // block_size)
+        return attn_lib.init_paged_kv_cache(
+            batch, num_blocks, block_size, max_blocks, cfg.n_kv_heads,
+            cfg.resolved_head_dim, dtype,
+        )
+    return init_block_cache(cfg, kind, batch, cache_len, dtype)
+
+
 # ---------------------------------------------------------------------------
 # per-kind apply
 # ---------------------------------------------------------------------------
@@ -171,13 +186,14 @@ def apply_block_full(
     return x, cache, aux
 
 
-def apply_block_decode(p, x, cfg: ArchConfig, kind: str, cache, pos, rng):
+def apply_block_decode(p, x, cfg: ArchConfig, kind: str, cache, pos, rng,
+                       active=None):
     """One-token block. Returns (x, new_cache)."""
     h = apply_norm(p["norm1"], x, cfg.norm_kind)
     if kind in ("attn", "local"):
         dims = attn_dims(cfg, kind)
         out, new_cache = attn_lib.attention_decode(
-            p["mixer"], h, cache, pos, dims, cfg.imc, rng
+            p["mixer"], h, cache, pos, dims, cfg.imc, rng, active=active
         )
     elif kind == "ssm":
         out, new_cache = ssm_lib.ssm_decode(p["mixer"], h, cache, cfg, cfg.imc, rng)

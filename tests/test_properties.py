@@ -1,4 +1,5 @@
-"""Hypothesis property sweeps for the quantizer and the bit-serial oracle.
+"""Hypothesis property sweeps for the quantizer, the bit-serial oracle and
+the paged-KV block allocator.
 
 Kept in their own module, guarded with ``pytest.importorskip``: the tier-1
 suite collects and passes without hypothesis installed (this file skips
@@ -21,6 +22,7 @@ from repro.core.quant import (
 )
 from repro.kernels import ref
 from repro.kernels.ref import BitSerialSpec, quantize_codes
+from repro.launch.serve import BlockAllocator
 
 
 # ---------------------------------------------------------------------------
@@ -102,3 +104,70 @@ def test_bitserial_ref_wide_open_property(b, k, m, bx, bw, xs):
                          v_c=1e9, x_signed=xs, apply_adc=False)
     yr = ref.imc_bitserial_ref(xc, wc, None, spec)
     np.testing.assert_allclose(np.asarray(yr), np.asarray(xc @ wc), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# paged-KV block allocator invariants (serve engine)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    num_blocks=st.integers(2, 64),
+    ops=st.lists(
+        st.tuples(st.booleans(), st.integers(0, 12)), min_size=1, max_size=60
+    ),
+)
+@settings(max_examples=60, deadline=None)
+def test_block_allocator_never_double_allocates(num_blocks, ops):
+    """Arbitrary admit/finish interleavings: every live allocation is
+    disjoint, block 0 is never handed out, the free count is conserved, and
+    a released request's blocks are immediately reusable."""
+    alloc = BlockAllocator(num_blocks)
+    capacity = num_blocks - 1  # block 0 reserved
+    live = []  # list of allocated block-lists (simulated active requests)
+
+    def check_invariants():
+        held = [b for blocks in live for b in blocks]
+        assert 0 not in held
+        assert len(held) == len(set(held))  # no double allocation
+        assert all(1 <= b < num_blocks for b in held)
+        assert alloc.free_count + len(held) == capacity  # conservation
+        assert alloc.used_count == len(held)
+
+    for is_admit, n in ops:
+        if is_admit:
+            free_before = alloc.free_count
+            got = alloc.alloc(n)
+            if n > free_before:
+                assert got is None  # all-or-nothing: no partial allocation
+                assert alloc.free_count == free_before  # nothing leaked
+            else:
+                assert got is not None and len(got) == n
+                live.append(got)
+        elif live:
+            freed = live.pop(n % len(live))  # finish an arbitrary request
+            alloc.free(freed)
+            if freed:
+                # released blocks are reusable right away
+                again = alloc.alloc(len(freed))
+                assert again is not None and set(again) <= set(
+                    range(1, num_blocks))
+                live.append(again)
+        check_invariants()
+
+    for blocks in live:
+        alloc.free(blocks)
+    assert alloc.free_count == capacity and alloc.used_count == 0
+
+
+@given(num_blocks=st.integers(2, 32), n=st.integers(0, 40))
+@settings(max_examples=40, deadline=None)
+def test_block_allocator_all_or_nothing(num_blocks, n):
+    alloc = BlockAllocator(num_blocks)
+    got = alloc.alloc(n)
+    if n <= num_blocks - 1:
+        assert got is not None and len(got) == n
+        assert alloc.free_count == num_blocks - 1 - n
+    else:
+        assert got is None
+        assert alloc.free_count == num_blocks - 1  # nothing leaked

@@ -1,0 +1,355 @@
+"""Paged-KV serve engine correctness.
+
+Equivalence suite: the paged engine (block-pool KV + batched bucketed
+prefill) must reproduce, token for token,
+  (a) per-request sequential decode (exact-length prefill, one token/step),
+  (b) the FROZEN PR-2 contiguous-cache engine,
+across the digital / imc_analytic / imc_bitserial substrates (rng=None: the
+IMC paths run their real quantized kernels, noiseless, so greedy tokens are
+bit-determined), including unequal prompt lengths, requests spanning many KV
+blocks, and sliding-window ring wrap.
+
+Plus bucketed-prefill edge cases (bucket-boundary prompt, length-1 prompt,
+multi-bucket admission in one tick) and paged-allocator behaviour under a
+tight physical pool.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.serve_bench import ContiguousEngine, drive_engine
+from repro import configs
+from repro.configs.base import ArchConfig
+from repro.core.imc_linear import IMCConfig
+from repro.launch.serve import BlockAllocator, Engine, Request, serve
+from repro.models import decode_step, init_params, prefill
+
+TINY = dict(
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+    max_seq=128, flash_q_block=16, flash_kv_block=16, dtype="float32",
+)
+
+DENSE = ArchConfig(name="t", family="dense", **TINY)
+WINDOWED = ArchConfig(
+    name="t", family="dense", **TINY, pattern=("local", "attn"), window=16,
+    attn_softcap=50.0, final_softcap=30.0, post_norm=True, emb_scale=True,
+)
+
+SUBSTRATES = ["digital", "imc_analytic", "imc_bitserial"]
+
+
+def _with_substrate(cfg, substrate):
+    if substrate == "digital":
+        return cfg
+    return cfg.replace(imc=IMCConfig(mode=substrate, bx=7, bw=7, v_wl=0.7))
+
+
+_PARAMS = {}
+
+
+def jax_params(cfg):
+    key = id(cfg)
+    if key not in _PARAMS:
+        _PARAMS[key] = init_params(jax.random.PRNGKey(0), cfg)
+    return _PARAMS[key]
+
+
+def _greedy_sequential(cfg, prompt: np.ndarray, max_new: int):
+    """Reference: one request alone, exact-length prefill + per-token decode."""
+    cache_len = len(prompt) + max_new + 8
+    logits, cache = prefill(jax_params(cfg), cfg, jnp.asarray(prompt)[None, :],
+                            cache_len=cache_len)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    while len(out) < max_new:
+        tok = jnp.asarray([out[-1]], jnp.int32)
+        logits, cache = decode_step(jax_params(cfg), cfg, tok, cache)
+        out.append(int(jnp.argmax(logits[0, 0])))
+    return out
+
+
+def _requests(cfg, lens, max_new, seed=3):
+    rnp = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rnp.integers(0, cfg.vocab_size, l),
+                    max_new=max_new)
+            for i, l in enumerate(lens)]
+
+
+# ---------------------------------------------------------------------------
+# equivalence: paged == frozen contiguous == sequential, three substrates
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("substrate", SUBSTRATES)
+def test_paged_matches_contiguous(substrate):
+    """Unequal prompts admitted into one batch: the paged engine and the
+    frozen PR-2 contiguous engine must emit bit-identical greedy tokens on
+    every substrate (rng=None: the IMC quantized kernels are deterministic).
+    Prompt lengths fall in distinct buckets so both engines issue identical
+    prefill computations - the IMC modes derive quantizer ranges from batch
+    statistics, so an (R, bucket) batched prefill is numerically a DIFFERENT
+    analog mapping than R solo prefills (batched-prefill equivalence is
+    pinned in digital, where quantization is absent and rows are exact).
+
+    In digital the outputs must also equal solo sequential decode."""
+    base = configs.get_smoke("musicgen-medium")
+    cfg = _with_substrate(base, substrate)
+    # bitserial routes every matmul through the bit-serial planes: keep small
+    lens = [5, 9, 17] if substrate != "imc_bitserial" else [5, 9]
+    max_new = 5 if substrate != "imc_bitserial" else 4
+    cache_len = 32 + max_new + 8  # multiple of the 8-token block
+    reqs = _requests(cfg, lens, max_new)
+
+    paged = Engine(cfg, jax_params(cfg), batch_slots=4, cache_len=cache_len,
+                   max_chunk=4)
+    paged_out = {r.rid: r.out for r in serve(
+        paged, [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+                for r in reqs])}
+
+    cont = ContiguousEngine(cfg, jax_params(cfg), 4, cache_len, max_chunk=4)
+    cont_out = {r.rid: r.out for r in drive_engine(
+        cont, [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+               for r in reqs])}
+
+    for r in reqs:
+        assert paged_out[r.rid] == cont_out[r.rid], (
+            substrate, r.rid, paged_out[r.rid], cont_out[r.rid])
+        if substrate == "digital":
+            ref = _greedy_sequential(cfg, r.prompt, r.max_new)
+            assert paged_out[r.rid] == ref, (r.rid, paged_out[r.rid], ref)
+
+
+@pytest.mark.parametrize("substrate", SUBSTRATES)
+def test_solo_paged_matches_sequential(substrate):
+    """A single-slot engine with a bucket-boundary prompt runs exactly the
+    reference computation (no pad positions, no batch-stat coupling): the
+    paged gather/scatter layout itself must be invisible to the IMC kernels
+    - greedy tokens equal solo sequential decode on every substrate."""
+    base = configs.get_smoke("musicgen-medium")
+    cfg = _with_substrate(base, substrate)
+    max_new = 4
+    reqs = _requests(cfg, [8], max_new, seed=9)  # len 8 == MIN_BUCKET
+    engine = Engine(cfg, jax_params(cfg), batch_slots=1, cache_len=16,
+                    max_chunk=4)
+    out = serve(engine, [Request(rid=0, prompt=reqs[0].prompt,
+                                 max_new=max_new)])
+    ref = _greedy_sequential(cfg, reqs[0].prompt, max_new)
+    assert out[0].out == ref, (substrate, out[0].out, ref)
+
+
+def test_request_spanning_many_blocks():
+    """A prompt + generation crossing several KV block boundaries (block=4:
+    prompt alone spans 6 blocks, decode writes walk through 3 more)."""
+    cfg = DENSE
+    lens = [21, 3, 11]
+    max_new = 10
+    reqs = _requests(cfg, lens, max_new, seed=7)
+    engine = Engine(cfg, jax_params(cfg), batch_slots=3, cache_len=40,
+                    max_chunk=4, block_size=4)
+    out = serve(engine, [Request(rid=r.rid, prompt=r.prompt, max_new=max_new)
+                         for r in reqs])
+    assert engine.alloc.used_count == 0  # all blocks returned on retire
+    for r in out:
+        ref = _greedy_sequential(cfg, next(q.prompt for q in reqs
+                                           if q.rid == r.rid), max_new)
+        assert r.out == ref, (r.rid, r.out, ref)
+
+
+def test_sliding_window_wrap():
+    """Windowed pattern: the local layers keep per-slot rings (wrap at their
+    own phase) while the global layers run paged; generate far past the
+    window from bucket-padded prefills of different true lengths."""
+    cfg = WINDOWED  # window 16
+    lens = [6, 13, 20, 27]
+    max_new = 24  # every slot wraps the ring at its own phase
+    reqs = _requests(cfg, lens, max_new, seed=4)
+    engine = Engine(cfg, jax_params(cfg), batch_slots=4,
+                    cache_len=32 + max_new + 8, max_chunk=8)
+    out = serve(engine, [Request(rid=r.rid, prompt=r.prompt, max_new=max_new)
+                         for r in reqs])
+    for r in out:
+        ref = _greedy_sequential(cfg, next(q.prompt for q in reqs
+                                           if q.rid == r.rid), max_new)
+        assert r.out == ref, (r.rid, r.out, ref)
+
+
+# ---------------------------------------------------------------------------
+# bucketed-prefill edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_boundary_prompt():
+    """Prompt lengths exactly at a power-of-two bucket boundary (8, 16): the
+    bucket equals the length, no pad positions at all."""
+    cfg = DENSE
+    for length in (8, 16):
+        reqs = _requests(cfg, [length], 6, seed=10 + length)
+        engine = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=32,
+                        max_chunk=4)
+        out = serve(engine, [Request(rid=0, prompt=reqs[0].prompt, max_new=6)])
+        ref = _greedy_sequential(cfg, reqs[0].prompt, 6)
+        assert out[0].out == ref, (length, out[0].out, ref)
+
+
+def test_length_one_prompt():
+    """A single-token prompt rides the MIN_BUCKET prefill (7 pad positions)."""
+    cfg = DENSE
+    reqs = _requests(cfg, [1, 9], 6, seed=11)
+    engine = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=24,
+                    max_chunk=4)
+    out = serve(engine, [Request(rid=r.rid, prompt=r.prompt, max_new=6)
+                         for r in reqs])
+    for r in out:
+        ref = _greedy_sequential(cfg, next(q.prompt for q in reqs
+                                           if q.rid == r.rid), 6)
+        assert r.out == ref, (r.rid, r.out, ref)
+
+
+def test_same_bucket_admissions_batch_into_one_prefill():
+    """Four same-bucket requests pending at once: ONE (4, bucket) prefill
+    call admits them all (PR-2 paid one dispatch per request)."""
+    cfg = DENSE
+    lens = [9, 12, 10, 16]  # all bucket 16
+    reqs = _requests(cfg, lens, 5, seed=12)
+    engine = Engine(cfg, jax_params(cfg), batch_slots=4, cache_len=32,
+                    max_chunk=4)
+    out = serve(engine, [Request(rid=r.rid, prompt=r.prompt, max_new=5)
+                         for r in reqs])
+    assert engine.prefill_calls == 1
+    assert engine.prefill_rows == 4
+    for r in out:
+        ref = _greedy_sequential(cfg, next(q.prompt for q in reqs
+                                           if q.rid == r.rid), 5)
+        assert r.out == ref, (r.rid, r.out, ref)
+
+
+def test_multi_bucket_admission_in_one_tick():
+    """Pending requests from different buckets admitted in the same tick:
+    one prefill call per bucket group, all before the first decode chunk."""
+    cfg = DENSE
+    lens = [5, 7, 12, 14]  # buckets 8, 8, 16, 16
+    reqs = _requests(cfg, lens, 5, seed=13)
+    engine = Engine(cfg, jax_params(cfg), batch_slots=4, cache_len=32,
+                    max_chunk=4)
+    pending = [Request(rid=r.rid, prompt=r.prompt, max_new=5) for r in reqs]
+    admitted = engine.admit_pending(pending)
+    assert len(admitted) == 4 and not pending
+    assert engine.prefill_calls == 2  # one per bucket, not one per request
+    assert engine.prefill_rows == 4
+    out = serve(engine, [])
+    for r in out:
+        ref = _greedy_sequential(cfg, next(q.prompt for q in reqs
+                                           if q.rid == r.rid), 5)
+        assert r.out == ref, (r.rid, r.out, ref)
+
+
+# ---------------------------------------------------------------------------
+# allocator / pool behaviour inside the engine
+# ---------------------------------------------------------------------------
+
+
+def test_tight_pool_defers_admission_and_reuses_blocks():
+    """A physical pool sized for ~one long request at a time: admission
+    stalls until blocks free, then reuses them; outputs stay exact."""
+    cfg = DENSE
+    lens = [20, 20, 20]
+    max_new = 4
+    reqs = _requests(cfg, lens, max_new, seed=14)
+    # each request needs ceil((20 + 3) / 8) = 3 blocks; pool holds 4 usable
+    engine = Engine(cfg, jax_params(cfg), batch_slots=3, cache_len=32,
+                    max_chunk=4, kv_blocks=5)
+    out = serve(engine, [Request(rid=r.rid, prompt=r.prompt, max_new=max_new)
+                         for r in reqs])
+    assert len(out) == 3
+    assert engine.alloc.used_count == 0
+    assert engine.alloc.free_count == 4
+    for r in out:
+        ref = _greedy_sequential(cfg, next(q.prompt for q in reqs
+                                           if q.rid == r.rid), max_new)
+        assert r.out == ref, (r.rid, r.out, ref)
+
+
+def test_oversized_request_raises():
+    cfg = DENSE
+    engine = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=16,
+                    max_chunk=4)
+    big = Request(rid=0, prompt=np.zeros(14, np.int64), max_new=8)
+    with pytest.raises(ValueError):
+        engine.admit_pending([big])
+    # an idle engine that can never admit must not spin forever
+    small_pool = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=32,
+                        max_chunk=4, kv_blocks=2)
+    with pytest.raises(ValueError):
+        serve(small_pool, [Request(rid=1, prompt=np.zeros(20, np.int64),
+                                   max_new=4)])
+
+
+def test_oversized_group_member_does_not_leak_blocks():
+    """An oversized request BEHIND a valid same-bucket head must not join the
+    group (it would blow past max_blocks mid-insert): the head admits
+    cleanly, the oversized one raises only once it reaches the head, and no
+    blocks leak along the way."""
+    cfg = DENSE
+    engine = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=16,
+                    max_chunk=4)
+    rnp = np.random.default_rng(16)
+    ok = Request(rid=0, prompt=rnp.integers(0, cfg.vocab_size, 6), max_new=4)
+    big = Request(rid=1, prompt=rnp.integers(0, cfg.vocab_size, 6),
+                  max_new=64)  # same bucket (8), needs blocks > max_blocks
+    pending = [ok, big]
+    # the head admits cleanly; the oversized request then reaches the head
+    # within the same call and raises - AFTER the group insert, never mid-
+    # insert, so engine state stays consistent
+    with pytest.raises(ValueError):
+        engine.admit_pending(pending)
+    assert pending == [big]  # ok admitted and dequeued before the raise
+    assert engine.active == 1
+    assert engine.alloc.used_count == engine._blocks_needed(ok)
+    out = serve(engine, [])
+    assert out[-1].out == _greedy_sequential(cfg, ok.prompt, 4)
+    assert engine.alloc.used_count == 0  # nothing leaked
+
+
+def test_kv_bytes_track_allocation():
+    """kv_bytes_in_use rises with admission and falls back on retirement -
+    the utilization signal the serve bench reports per active token."""
+    cfg = DENSE
+    engine = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=32,
+                    max_chunk=4)
+    idle = engine.kv_bytes_in_use()
+    reqs = _requests(cfg, [9], 4, seed=15)
+    pending = [Request(rid=0, prompt=reqs[0].prompt, max_new=4)]
+    engine.admit_pending(pending)
+    admitted_bytes = engine.kv_bytes_in_use()
+    assert admitted_bytes > idle
+    serve(engine, [])
+    assert engine.kv_bytes_in_use() == idle
+
+
+def test_allocator_basics():
+    a = BlockAllocator(8)
+    assert a.free_count == 7  # block 0 reserved
+    got = a.alloc(7)
+    assert sorted(got) == list(range(1, 8))
+    assert a.alloc(1) is None
+    a.free(got[:3])
+    again = a.alloc(3)
+    assert sorted(again) == sorted(got[:3])
+    with pytest.raises(ValueError):
+        a.free([0])
+
+
+def test_exact_prefill_recurrent_still_served():
+    """Recurrent patterns (no global-attn layers -> nothing to page) keep
+    exact-length prefill and still admit unequal lengths in one batch."""
+    cfg = configs.get_smoke("mamba2-2.7b")
+    max_new = 4
+    reqs = _requests(cfg, [5, 11], max_new, seed=6)
+    engine = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=32,
+                    max_chunk=4)
+    out = serve(engine, [Request(rid=r.rid, prompt=r.prompt, max_new=max_new)
+                         for r in reqs])
+    for r in out:
+        ref = _greedy_sequential(cfg, next(q.prompt for q in reqs
+                                           if q.rid == r.rid), max_new)
+        assert r.out == ref, (r.rid, r.out, ref)
