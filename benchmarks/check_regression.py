@@ -1,0 +1,237 @@
+"""Bench-regression gate: compare a CI-produced bench JSON against the
+committed baseline and fail (exit 1) on regression.
+
+  PYTHONPATH=src python benchmarks/check_regression.py \
+      --pair BENCH_kernels.json:bench_kernels_ci.json \
+      --pair BENCH_serve.json:bench_serve_ci.json \
+      --pair BENCH_energy.json:bench_energy_ci.json
+
+Records are matched across files by an identity key (the stable descriptor
+fields: bench/config/arch/shape dims/targets), then compared metric by
+metric under per-metric tolerance rules:
+
+  * structural counters (MXU calls, operand bytes, prefill calls, decode
+    steps, billed tokens) are DETERMINISTIC functions of the code -> exact;
+  * deterministic floats (KV bytes/active token, J/token, EDP/token) get a
+    small relative tolerance (numeric jitter across BLAS/XLA builds);
+  * measured wall-clock RATIOS (paged-vs-contiguous tok/s, kernel speedups)
+    compare the same two implementations on the same box, so they transfer
+    across machines - but noisily: they only gate with generous floors;
+  * absolute wall times (tok_s, wall_us, ttft_ms) never gate.
+
+A baseline record missing from the current run is a failure (a silently
+dropped bench is exactly the "stale artifact" failure mode this gate
+exists for); extra current records are allowed (new benches land first).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List, Tuple
+
+# fields that IDENTIFY a record (never compared as metrics)
+ID_FIELDS = (
+    "bench", "config", "arch", "mode", "kind", "name",
+    "slots", "requests", "gen", "prompt_len", "prompt_lens",
+    "B", "K", "M", "bx", "bw", "rows", "bank_rows", "n", "n_banks",
+    "snr_t_target_db", "snr_low_db", "snr_high_db",
+)
+
+# metric -> (rule, tolerance); rules:
+#   exact      current == baseline
+#   rel        |cur - base| <= tol * max(|base|, 1e-30)
+#   min_ratio  cur >= tol * base   (higher is better, deterministic metrics)
+#   max_ratio  cur <= tol * base   (lower is better, deterministic metrics)
+#   min_abs    cur >= tol          (wall-clock ratios: committed baselines on
+#   max_abs    cur <= tol           a shared box swing run-to-run, so gating
+#                                   relative to them fails on pure variance -
+#                                   an absolute floor/ceiling encodes the
+#                                   invariant that actually transfers, e.g.
+#                                   "the rewrite is not slower than seed")
+#   exact_str  string/bool equality
+RULES: Dict[str, Tuple[str, float]] = {
+    # kernel bench structural counters
+    "mxu_calls": ("exact", 0.0),
+    "noise_bytes": ("exact", 0.0),
+    "w_bytes": ("exact", 0.0),
+    "x_bytes": ("exact", 0.0),
+    "plane_flops_mf": ("exact", 0.0),
+    "noise_bytes_before": ("exact", 0.0),
+    "noise_bytes_after": ("exact", 0.0),
+    "noise_bytes_reduction": ("exact", 0.0),
+    "mxu_calls_before": ("exact", 0.0),
+    "mxu_calls_after": ("exact", 0.0),
+    # kernel summary speedups (same-box ratio of rewrite vs frozen seed;
+    # observed run-to-run spread 1.6-4.9 / 0.7-2.5 on an idle box, so the
+    # absolute floor asserts "not slower than seed beyond noise")
+    "speedup_vs_seed": ("min_abs", 0.8),
+    "speedup_vs_seed_noise": ("min_abs", 0.5),
+    # serve bench structural counters
+    "prefill_calls": ("exact", 0.0),
+    "prefill_rows": ("exact", 0.0),
+    "decode_chunks": ("exact", 0.0),
+    "decode_steps": ("exact", 0.0),
+    "tokens": ("exact", 0.0),
+    "host_syncs_per_token": ("rel", 0.01),
+    "sync_bytes_per_token": ("rel", 0.01),
+    "jit_out_bytes_per_tick": ("rel", 0.01),
+    "kv_bytes_per_active_token": ("rel", 0.05),
+    "kv_bytes_per_active_token_before": ("rel", 0.05),
+    "kv_bytes_per_active_token_after": ("rel", 0.05),
+    "prefill_calls_before": ("exact", 0.0),
+    "prefill_calls_after": ("exact", 0.0),
+    "kv_reduction": ("min_ratio", 0.9),
+    # paged vs frozen-contiguous wall ratios (observed 1.0-4.6 / 0.2-1.2):
+    # absolute bounds assert "paged not materially slower than contiguous"
+    "speedup_tok_s": ("min_abs", 0.7),
+    "ttft_ratio": ("max_abs", 3.0),
+    # serve-path energy accounting (deterministic rollup)
+    "b_adc": ("exact", 0.0),
+    "knob": ("rel", 1e-9),
+    "snr_t_db": ("rel", 0.01),
+    "prefill_tokens": ("exact", 0.0),
+    "decode_tokens": ("exact", 0.0),
+    "generated_tokens": ("exact", 0.0),
+    "prefill_j": ("rel", 0.02),
+    "decode_j": ("rel", 0.02),
+    "j_per_token": ("rel", 0.02),
+    "j_per_request": ("rel", 0.02),
+    "edp_per_token": ("rel", 0.02),
+    "delay_per_token_s": ("rel", 0.02),
+    "tok_s_compute": ("rel", 0.02),
+    "j_per_token_best": ("rel", 0.02),
+    "edp_per_token_best": ("rel", 0.02),
+    # frontier/crossover shape (the acceptance invariant itself)
+    "best_kind_energy": ("exact_str", 0.0),
+    "best_kind_edp": ("exact_str", 0.0),
+    "best_kind_high": ("exact_str", 0.0),
+    "kinds_feasible": ("exact_str", 0.0),
+    "qs_feasible_low": ("exact_str", 0.0),
+    "qs_feasible_high": ("exact_str", 0.0),
+    "crossover": ("exact_str", 0.0),
+}
+
+
+def record_key(suite: str, rec: dict) -> str:
+    ident = {k: rec[k] for k in ID_FIELDS if k in rec}
+    return suite + "::" + json.dumps(ident, sort_keys=True)
+
+
+def _records(payload: dict) -> Dict[str, dict]:
+    out: Dict[str, dict] = {}
+    for suite, body in payload.get("suites", {}).items():
+        for rec in body.get("records", []):
+            key = record_key(suite, rec)
+            # duplicate keys (e.g. repeated shapes) disambiguate by encounter
+            # order; NOTE this pairing is order-dependent, so a bench that
+            # emits identical-identity records must keep their relative order
+            # stable (no committed baseline has duplicates today)
+            base, i = key, 0
+            while key in out:
+                i += 1
+                key = f"{base}#{i}"
+            out[key] = rec
+    return out
+
+
+def compare_metric(name: str, base, cur) -> str:
+    """Empty string if OK, else a failure description."""
+    rule, tol = RULES[name]
+    if rule == "exact_str":
+        return "" if cur == base else f"{name}: {base!r} -> {cur!r}"
+    try:
+        b, c = float(base), float(cur)
+    except (TypeError, ValueError):
+        return "" if cur == base else f"{name}: {base!r} -> {cur!r}"
+    if math.isnan(b) or math.isnan(c):
+        return ""  # a NaN baseline can't gate
+    if rule == "exact":
+        return "" if b == c else f"{name}: {b:g} -> {c:g} (exact)"
+    if rule == "rel":
+        if abs(c - b) <= tol * max(abs(b), 1e-30):
+            return ""
+        return f"{name}: {b:g} -> {c:g} (|d| > {tol:.0%})"
+    if rule == "min_ratio":
+        if c >= tol * b:
+            return ""
+        return f"{name}: {b:g} -> {c:g} (< {tol:g}x baseline)"
+    if rule == "max_ratio":
+        if c <= tol * b:
+            return ""
+        return f"{name}: {b:g} -> {c:g} (> {tol:g}x baseline)"
+    if rule == "min_abs":
+        return "" if c >= tol else f"{name}: {c:g} (< floor {tol:g})"
+    if rule == "max_abs":
+        return "" if c <= tol else f"{name}: {c:g} (> ceiling {tol:g})"
+    raise ValueError(rule)
+
+
+def compare_payloads(baseline: dict, current: dict) -> List[str]:
+    """All regressions of ``current`` vs ``baseline`` (empty list = pass)."""
+    failures: List[str] = []
+    for suite, body in baseline.get("suites", {}).items():
+        if "error" in body:
+            continue  # an errored baseline suite can't gate
+        cur_body = current.get("suites", {}).get(suite)
+        if cur_body is None:
+            failures.append(f"{suite}: suite missing from current run")
+            continue
+        if "error" in cur_body:
+            failures.append(f"{suite}: current run errored: {cur_body['error']}")
+            continue
+    base_recs = _records(baseline)
+    cur_recs = _records(current)
+    for key, brec in base_recs.items():
+        crec = cur_recs.get(key)
+        if crec is None:
+            suite = key.split("::", 1)[0]
+            if suite in current.get("suites", {}) \
+                    and "error" not in current["suites"][suite]:
+                failures.append(f"missing record: {key}")
+            continue
+        for metric, bval in brec.items():
+            if metric in ID_FIELDS or metric not in RULES:
+                continue
+            if metric not in crec:
+                failures.append(f"{key}: metric {metric} missing")
+                continue
+            msg = compare_metric(metric, bval, crec[metric])
+            if msg:
+                failures.append(f"{key}: {msg}")
+    return failures
+
+
+def check_pair(baseline_path: str, current_path: str) -> List[str]:
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(current_path) as f:
+        current = json.load(f)
+    return [f"[{baseline_path} vs {current_path}] {m}"
+            for m in compare_payloads(baseline, current)]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", action="append", required=True,
+                    metavar="BASELINE:CURRENT",
+                    help="baseline JSON : CI-produced JSON (repeatable)")
+    args = ap.parse_args(argv)
+    failures: List[str] = []
+    for pair in args.pair:
+        baseline_path, _, current_path = pair.partition(":")
+        if not current_path:
+            ap.error(f"--pair wants BASELINE:CURRENT, got {pair!r}")
+        failures.extend(check_pair(baseline_path, current_path))
+    if failures:
+        print(f"BENCH REGRESSION: {len(failures)} failure(s)")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("bench regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

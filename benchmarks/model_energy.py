@@ -10,53 +10,20 @@ from __future__ import annotations
 from typing import List, Tuple
 
 from repro import configs
-from repro.core.mapping import MatmulShape, map_model
+from repro.core.mapping import map_model, per_token_matmul_shapes
 
 Row = Tuple[str, float, str]
 
 
 def model_matmul_shapes(name: str):
     """All per-token matmul shapes of an arch (weights only; attention
-    score/value products are activation-activation and stay digital)."""
-    cfg = configs.get(name)
-    d, hd = cfg.d_model, cfg.resolved_head_dim
-    shapes = []
-    counts = {}
-    for kind in cfg.pattern:
-        counts[kind] = counts.get(kind, 0) + cfg.n_full_cycles
-    for i, kind in enumerate(cfg.tail_kinds):
-        counts[kind] = counts.get(kind, 0) + 1
-    for kind, cnt in counts.items():
-        if kind in ("attn", "local"):
-            shapes += [
-                MatmulShape(f"{kind}.wq", d, cfg.n_heads * hd, cnt),
-                MatmulShape(f"{kind}.wk", d, cfg.n_kv_heads * hd, cnt),
-                MatmulShape(f"{kind}.wv", d, cfg.n_kv_heads * hd, cnt),
-                MatmulShape(f"{kind}.wo", cfg.n_heads * hd, d, cnt),
-            ]
-        elif kind == "ssm":
-            d_in = cfg.ssm_expand * d
-            proj = 2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state + d_in // cfg.ssm_head_dim
-            shapes += [
-                MatmulShape("ssm.in_proj", d, proj, cnt),
-                MatmulShape("ssm.out_proj", d_in, d, cnt),
-            ]
-        elif kind == "rglru":
-            w = cfg.rnn_width
-            shapes += [
-                MatmulShape("rg.x", d, w, cnt),
-                MatmulShape("rg.gate", d, w, cnt),
-                MatmulShape("rg.out", w, d, cnt),
-            ]
-        if kind != "ssm" and cfg.d_ff > 0:
-            mults = 3 if cfg.mlp_kind in ("swiglu", "geglu") else 2
-            e = cfg.top_k if cfg.n_experts else 1  # active experts per token
-            shapes += [
-                MatmulShape("mlp.wi", d, cfg.d_ff, cnt * e * (mults - 1)),
-                MatmulShape("mlp.wo", cfg.d_ff, d, cnt * e),
-            ]
-    shapes.append(MatmulShape("lm_head", d, cfg.vocab_size, 1))
-    return shapes
+    score/value products are activation-activation and stay digital).
+
+    Thin name-based wrapper over the ONE shared shapes walk
+    (``core.mapping.per_token_matmul_shapes``) also used by the serve-path
+    meter and the profiling rollup - keeping a private copy here is how
+    sites silently double-count between accounting paths."""
+    return per_token_matmul_shapes(configs.get(name))
 
 
 def run(archs=("phi3-mini-3.8b", "gemma2-9b", "mamba2-2.7b",

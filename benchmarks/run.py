@@ -16,6 +16,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import platform
 import sys
 import time
 
@@ -30,7 +31,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig9,fig10,fig11,fig12,fig13,"
                          "pareto,layer_snr,model_energy,kernel,serve,"
-                         "roofline")
+                         "serve_energy,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write a machine-readable JSON report")
     args = ap.parse_args()
@@ -51,17 +52,41 @@ def main() -> None:
     suites["model_energy"] = model_energy.run
     suites["kernel"] = kernel_bench.run
     suites["serve"] = serve_bench.run
+    # deterministic serve-path energy accounting alone (fast; no wall-clock
+    # repeats) - the committed BENCH_energy.json baseline is produced with
+    #   PYTHONPATH=src python benchmarks/run.py --only serve_energy \
+    #       --json BENCH_energy.json
+    suites["serve_energy"] = lambda: serve_bench.energy_rows(
+        serve_bench.energy_records())
     suites["roofline"] = roofline.run
     # suites with structured records: run once, derive the CSV rows from them
     record_fns = {"kernel": (kernel_bench.bench_records,
                              kernel_bench.rows_from_records),
                   "serve": (serve_bench.bench_records,
-                            serve_bench.rows_from_records)}
+                            serve_bench.rows_from_records),
+                  "serve_energy": (serve_bench.energy_records,
+                                   serve_bench.energy_rows)}
 
     only = set(args.only.split(",")) if args.only else None
+    if only and "serve" in only:
+        # the serve bench surface reports energy too: selecting the serve
+        # suite pulls in the (memoized, deterministic) serve_energy rollup
+        only.add("serve_energy")
     payload = {
-        "schema": "repro-imc-bench/v1",
+        "schema": "repro-imc-bench/v2",
+        "schema_version": 2,
         "backend": jax.default_backend(),
+        # machine/XLA provenance: lets the regression gate (and humans) tell
+        # a real perf change from a toolchain change, and the schema test
+        # reject stale/truncated committed artifacts
+        "meta": {
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "machine": platform.machine(),
+            "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        },
         "suites": {},
     }
     print("name,value,derived")

@@ -7,6 +7,10 @@ The prompt set is deliberately MIXED short/long: the paged KV cache admits a
 for the tokens each actually keeps (a contiguous layout would size all four
 slots for the 48-token worst case).
 
+The digital pass also meters the served traffic (launch.metering.DPMeter)
+and prints the serve-path energy report: J/token, J/request and EDP/token at
+the min-energy QS/QR/CM 512-row design points.
+
 Run:  PYTHONPATH=src python examples/serve_imc.py
 """
 import numpy as np
@@ -16,12 +20,17 @@ from repro.launch import serve as serve_mod
 MIXED_PROMPT_LENS = "4,24,48,6,8,40,5,16"
 
 
-def run(imc_mode=None, v_wl=0.7):
+def run(imc_mode=None, v_wl=0.7, energy_report=False):
     args = ["--arch", "musicgen-medium", "--smoke", "--batch", "4",
             "--requests", "8", "--prompt-lens", MIXED_PROMPT_LENS,
             "--gen", "12"]
     if imc_mode:
         args += ["--imc-mode", imc_mode, "--imc-vwl", str(v_wl)]
+    if energy_report:
+        # meter the served traffic and print J/token, J/request, EDP/token
+        # at the min-energy QS/QR/CM 512-row design points (the serve-path
+        # rollup of the paper's energy-delay-accuracy frontier)
+        args += ["--energy-report"]
     return serve_mod.main(args)
 
 
@@ -34,7 +43,7 @@ def agreement(a, b):
 
 
 if __name__ == "__main__":
-    digital = run(None)
+    digital = run(None, energy_report=True)
     print(f"digital: served {len(digital)} requests")
     for mode, v_wl in [("imc_analytic", 0.8), ("imc_analytic", 0.6)]:
         noisy = run(mode, v_wl)

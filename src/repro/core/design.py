@@ -30,6 +30,10 @@ from repro.core.compute_models import TechParams, TECH_65NM
 from repro.core.quant import QuantSpec, SignalStats, UNIFORM_STATS
 from repro.core import snr as snr_lib
 
+# digital reduction-tree latency per level (banked composition and
+# cross-tile workload rollups share it: one calibration site)
+T_REDUCE_LEVEL = 1e-10  # s
+
 V_WL_GRID = tuple(np.round(np.arange(0.50, 0.86, 0.025), 3))
 C_O_GRID = tuple(float(c) * 1e-15 for c in (0.5, 1, 1.5, 2, 3, 4.5, 6, 9, 12, 16))
 BANK_SPLITS = (1, 2, 4, 8, 16, 32)
@@ -118,7 +122,8 @@ def evaluate_point(
     width = b_adc + int(math.ceil(math.log2(max(n_banks, 2))))
     energy = n_banks * e_bank + _bank_reduction_energy(n_banks, width, tech)
     # banks operate in parallel; reduction adds one tree of log2(n_banks) adds
-    delay = arch.delay_per_dp(b_adc) + math.ceil(math.log2(max(n_banks, 1)) or 0) * 1e-10
+    delay = arch.delay_per_dp(b_adc) \
+        + math.ceil(math.log2(max(n_banks, 1)) or 0) * T_REDUCE_LEVEL
     return DesignPoint(
         arch_kind=kind,
         n=n,
@@ -290,7 +295,7 @@ def _grid_metrics(kind: str, n: int, bx: int, bw: int, stats: SignalStats,
         delay_bank = (2.0 ** (bw - 1) * tech.t0 + tech.t_setup
                       + 2 * tech.t0 + tech.t_setup
                       + b_adc * tech.t_adc_per_bit)
-    delay = delay_bank + np.ceil(np.log2(np.maximum(banks, 1))) * 1e-10
+    delay = delay_bank + np.ceil(np.log2(np.maximum(banks, 1))) * T_REDUCE_LEVEL
     energy = np.broadcast_to(energy + 0.0 * snr_t_db, snr_t_db.shape)
     delay = np.broadcast_to(delay + 0.0 * snr_t_db, snr_t_db.shape)
     return {
@@ -360,17 +365,74 @@ def optimize(
     return best
 
 
+# ---------------------------------------------------------------------------
+# workload-level rollup: one token-forward of a model costed at a design point
+# ---------------------------------------------------------------------------
+
+
+def workload_metrics(pt: DesignPoint, sites) -> dict:
+    """Energy/delay of ONE token-forward over ``sites`` at design point ``pt``.
+
+    ``sites`` is an iterable of ``(k, m, calls)`` matmul-site triples (see
+    :func:`repro.core.mapping.per_token_matmul_shapes`): each call evaluates
+    ``m`` output dot products of dimension ``k``.  A site whose DP dimension
+    exceeds the design point's ``pt.n`` is tiled onto ``ceil(k / pt.n)``
+    bank-row groups (the ``core.mapping`` bank tiling) whose partials reduce
+    digitally, exactly like the in-design banking of ``evaluate_point``.
+    Banks are column- and tile-parallel, so per-call delay is one DP
+    conversion; sites within a token-forward are sequential (layer order).
+    """
+    from repro.core import scaling
+
+    tech = scaling.node(pt.tech)
+    energy = 0.0
+    delay = 0.0
+    for k, m, calls in sites:
+        tiles = int(math.ceil(k / pt.n))
+        width = pt.b_adc + int(math.ceil(math.log2(max(tiles * pt.n_banks, 2))))
+        e_dp = tiles * pt.energy_per_dp + _bank_reduction_energy(tiles, width, tech)
+        energy += calls * m * e_dp
+        delay += calls * (pt.delay_per_dp
+                          + math.ceil(math.log2(max(tiles, 1))) * T_REDUCE_LEVEL)
+    return {
+        "energy_per_token_j": energy,
+        "delay_per_token_s": delay,
+        "edp_per_token": energy * delay,
+    }
+
+
 def pareto_sweep(
     n: int,
     stats: SignalStats = UNIFORM_STATS,
     tech: TechParams = TECH_65NM,
     kinds: Iterable[str] = ("qs", "qr", "cm"),
     targets_db: Iterable[float] = tuple(range(8, 44, 2)),
+    workload=None,
 ):
-    """Energy-vs-SNR_T pareto frontier (the Fig. 13-style trade-off curve)."""
+    """Energy-vs-SNR_T pareto frontier (the Fig. 13-style trade-off curve).
+
+    With ``workload=`` (an iterable of ``(k, m, calls)`` matmul-site triples,
+    e.g. from a :class:`repro.launch.metering.DPMeter`), each SNR target
+    re-ranks the per-kind optima by SERVE-WORKLOAD EDP per token-forward
+    (:func:`workload_metrics`) instead of per-DP energy - the rollup the
+    paper's "QS at low / QR at high compute SNR" guideline is stated over.
+    """
     out = []
     for t in targets_db:
-        pt = optimize(n, t, stats=stats, tech=tech, kinds=kinds)
-        if pt is not None:
-            out.append((t, pt))
+        if workload is None:
+            pt = optimize(n, t, stats=stats, tech=tech, kinds=kinds)
+            if pt is not None:
+                out.append((t, pt))
+            continue
+        best = None
+        best_edp = math.inf
+        for kind in kinds:
+            pt = optimize(n, t, stats=stats, tech=tech, kinds=(kind,))
+            if pt is None:
+                continue
+            edp = workload_metrics(pt, workload)["edp_per_token"]
+            if edp < best_edp:
+                best, best_edp = pt, edp
+        if best is not None:
+            out.append((t, best))
     return out

@@ -33,6 +33,58 @@ class MatmulShape:
     calls: int = 1
 
 
+def per_token_matmul_shapes(cfg) -> List[MatmulShape]:
+    """All weight-stationary matmul sites one token-forward of ``cfg``
+    executes (attention score/value products are activation-activation and
+    stay digital).  ``calls`` counts layer repetitions per token.
+
+    This is THE shapes walk: model-scale energy rollups
+    (``benchmarks/model_energy``), the serve-path meter
+    (``launch.metering.DPMeter``) and the profiling-side rollup
+    (``launch.breakdown``) all share it, so a site can never be counted
+    twice (or with diverging ``calls``) between the accounting paths.
+    """
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    shapes: List[MatmulShape] = []
+    counts: Dict[str, int] = {}
+    for kind in cfg.pattern:
+        counts[kind] = counts.get(kind, 0) + cfg.n_full_cycles
+    for kind in cfg.tail_kinds:
+        counts[kind] = counts.get(kind, 0) + 1
+    for kind, cnt in counts.items():
+        if kind in ("attn", "local"):
+            shapes += [
+                MatmulShape(f"{kind}.wq", d, cfg.n_heads * hd, cnt),
+                MatmulShape(f"{kind}.wk", d, cfg.n_kv_heads * hd, cnt),
+                MatmulShape(f"{kind}.wv", d, cfg.n_kv_heads * hd, cnt),
+                MatmulShape(f"{kind}.wo", cfg.n_heads * hd, d, cnt),
+            ]
+        elif kind == "ssm":
+            d_in = cfg.ssm_expand * d
+            proj = (2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+                    + d_in // cfg.ssm_head_dim)
+            shapes += [
+                MatmulShape("ssm.in_proj", d, proj, cnt),
+                MatmulShape("ssm.out_proj", d_in, d, cnt),
+            ]
+        elif kind == "rglru":
+            w = cfg.rnn_width
+            shapes += [
+                MatmulShape("rg.x", d, w, cnt),
+                MatmulShape("rg.gate", d, w, cnt),
+                MatmulShape("rg.out", w, d, cnt),
+            ]
+        if kind != "ssm" and cfg.d_ff > 0:
+            mults = 3 if cfg.mlp_kind in ("swiglu", "geglu") else 2
+            e = cfg.top_k if cfg.n_experts else 1  # active experts per token
+            shapes += [
+                MatmulShape("mlp.wi", d, cfg.d_ff, cnt * e * (mults - 1)),
+                MatmulShape("mlp.wo", cfg.d_ff, d, cnt * e),
+            ]
+    shapes.append(MatmulShape("lm_head", d, cfg.vocab_size, 1))
+    return shapes
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerReport:
     name: str

@@ -1,18 +1,17 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS_EXTRA", "")
-)
-
 """Collective/FLOP breakdown of one dry-run cell: per-while-loop costs with
 trip counts, the heaviest collective ops and their op_name provenance.
 The SSPerf profiling tool (the 'profile' of the hypothesis loop).
 
   PYTHONPATH=src python -m repro.launch.breakdown --arch granite-20b \
       --shape prefill_32k [--multi-pod]
+
+Also the training/profiling-side home of the IMC energy rollup
+(``forward_energy`` / ``--imc-energy``), sharing one code path with the
+serve-path meter (``launch.metering``).
 """
 import argparse
 import collections
+import os
 import re
 
 import jax
@@ -80,14 +79,70 @@ def report(hlo_text: str, top: int = 12):
             print(f"    {kind:20s} {b/2**20:9.1f}MiB/iter {res}  <- {prov}")
 
 
+def forward_energy(cfg, design, tokens: float = 1, sites=None) -> dict:
+    """IMC energy/delay rollup of ``tokens`` token-forwards of ``cfg`` at a
+    ``core.design`` design point - the training/profiling-side view of the
+    same accounting the serve meter reports.
+
+    Deliberately a thin veneer over ``launch.metering.energy_for_tokens``
+    with the shared ``core.mapping.per_token_matmul_shapes`` walk: a second
+    independent shapes walk here would silently double-count (or drop)
+    matmul sites relative to the serve-side rollup.  Pinned equal to the
+    meter on a single full forward by ``tests/test_metering.py``.
+    """
+    from repro.core.mapping import per_token_matmul_shapes
+    from repro.launch.metering import energy_for_tokens
+
+    if sites is None:
+        sites = per_token_matmul_shapes(cfg)
+    return energy_for_tokens(sites, design, tokens)
+
+
+def imc_energy_report(arch: str, shape_name: str, snr_db: float):
+    """Print the per-substrate IMC energy rollup for one dry-run cell shape
+    (tokens = batch x seq for train/prefill, batch for decode)."""
+    from repro.core.design import optimize
+
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind in ("train", "prefill") else 1)
+    print(f"== IMC energy rollup: {arch} {shape_name} "
+          f"({tokens} token-forwards, SNR_T >= {snr_db} dB) ==")
+    for kind in ("qs", "qr", "cm"):
+        pt = optimize(n=512, snr_t_target_db=snr_db, kinds=(kind,))
+        if pt is None:
+            print(f"  {kind}: infeasible at {snr_db} dB")
+            continue
+        r = forward_energy(cfg, pt, tokens)
+        print(f"  {kind}: {r['energy_j']:.3e} J total, "
+              f"{r['energy_per_token_j']:.3e} J/token-forward, "
+              f"{r['delay_per_token_s']:.3e} s/token (compute), "
+              f"EDP/token {r['edp_per_token']:.3e}")
+
+
 def main():
+    # CLI-only: force the 512-device host platform for dry-run compiles.
+    # Set here (NOT at import) so importing this module for forward_energy
+    # cannot flip an in-process test session multi-device; jax initializes
+    # its backend lazily, so this still precedes any device use below.
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS_EXTRA", "")
+    )
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--no-fsdp", action="store_true")
     ap.add_argument("--layout", default="")
+    ap.add_argument("--imc-energy", type=float, default=None, metavar="SNR_DB",
+                    help="print the IMC energy rollup of this cell at the "
+                         "given SNR_T target instead of compiling the HLO")
     args = ap.parse_args()
+    if args.imc_energy is not None:
+        imc_energy_report(args.arch, args.shape, args.imc_energy)
+        return
     lowered = lower_cell(args.arch, args.shape, args.multi_pod,
                          fsdp=not args.no_fsdp, layout=args.layout)
     compiled = lowered.compile()

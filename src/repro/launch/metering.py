@@ -1,0 +1,251 @@
+"""Serve-path energy-delay metering: roll real serving traffic up to the
+paper's energy-delay-accuracy metrics.
+
+The serve engine (``launch.serve.Engine``) reports tok/s and KV bytes; the
+paper's headline result is an energy-delay frontier over QS/QR/CM design
+points.  This module is the missing link: a :class:`DPMeter` counts the
+dot-product work the engine admits - per phase (prefill vs decode) and per
+matmul site - and :func:`serve_energy_report` multiplies those counts by a
+``core.design`` design point's ``energy_per_dp`` / ``delay_per_dp`` to report
+J/token, J/request, EDP/token and compute-model tok/s.
+
+Metering costs nothing on device: every count is a pure function of the
+host-side call arguments the engine already computes (the admitted
+``(R, bucket)`` of each batched prefill and the ``(active, T)`` of each fused
+decode chunk), so the fused-scan and one-``(slots, T)``-block transfer
+contracts are untouched.
+
+Billing policy (pinned by ``tests/test_metering.py``; documented in ROADMAP):
+
+  * prefill bucket padding IS billed: an admitted row executes the full
+    ``(bucket,)``-token matmul sequence regardless of its true length - pad
+    positions occupy real bank conversions;
+  * dummy pow2-R pad rows are NOT billed: they exist only to stabilize the
+    jit compile key and their outputs are dropped before any bank would be
+    scheduled for them;
+  * decode bills ACTIVE slots only: inactive rows in the fused scan are a
+    batching artifact (their writes go to the garbage block), not work a
+    deployed accelerator must schedule.
+
+The per-site shapes walk is shared with ``benchmarks/model_energy`` and
+``launch.breakdown`` (``core.mapping.per_token_matmul_shapes``), and the
+per-token energy/delay math is shared with ``core.design.workload_metrics``
+- one code path, so serve-side and training-side accounting cannot silently
+double-count a site.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import design as design_lib
+from repro.core.design import DesignPoint
+from repro.core.mapping import MatmulShape, per_token_matmul_shapes
+
+
+class DPMeter:
+    """Counts billed token-forwards (and thus dot-product evaluations) per
+    phase and per matmul site for a served workload.
+
+    The engine calls :meth:`note_prefill` once per batched ``(R, bucket)``
+    prefill group and :meth:`note_decode` once per fused decode chunk; both
+    are O(1) host-side integer updates.
+    """
+
+    def __init__(self, cfg=None, sites: Optional[Sequence[MatmulShape]] = None):
+        if sites is None:
+            if cfg is None:
+                raise ValueError("need a model config or an explicit site list")
+            sites = per_token_matmul_shapes(cfg)
+        self.sites: List[MatmulShape] = list(sites)
+        # prefill: billed = admitted rows x bucket (pad rows excluded)
+        self.prefill_billed_tokens = 0
+        self.prefill_true_tokens = 0
+        self.prefill_groups = 0
+        self.prefill_rows = 0
+        # decode: billed = active rows x scan length
+        self.decode_billed_tokens = 0
+        self.decode_chunks = 0
+
+    # -- engine hook points ---------------------------------------------------
+    def note_prefill(self, r_real: int, bucket: int,
+                     true_lens: Optional[Sequence[int]] = None):
+        """One admitted prefill group: ``r_real`` real rows (pow2 pad rows
+        excluded), each billed for the full ``bucket`` positions."""
+        self.prefill_billed_tokens += r_real * bucket
+        if true_lens is not None:
+            self.prefill_true_tokens += int(sum(true_lens))
+        self.prefill_groups += 1
+        self.prefill_rows += r_real
+
+    def note_decode(self, n_active: int, n_steps: int):
+        """One fused decode chunk: ``n_active`` live slots each execute
+        ``n_steps`` token-forwards."""
+        self.decode_billed_tokens += n_active * n_steps
+        self.decode_chunks += 1
+
+    # -- derived counts -------------------------------------------------------
+    @property
+    def billed_tokens(self) -> int:
+        return self.prefill_billed_tokens + self.decode_billed_tokens
+
+    @property
+    def prefill_pad_tokens(self) -> int:
+        """Billed-but-useless bucket-padding positions."""
+        return self.prefill_billed_tokens - self.prefill_true_tokens
+
+    def site_triples(self):
+        """``(k, m, calls)`` triples (the ``core.design.workload_metrics``
+        workload format)."""
+        return [(s.k, s.m, s.calls) for s in self.sites]
+
+    def dp_counts(self, phase: str = "total", rows: int = 512) -> Dict[str, float]:
+        """Dot-product evaluations per matmul site for ``phase`` ("prefill" |
+        "decode" | "total"), with DP dimensions tiled onto ``rows``-row banks
+        (``ceil(k / rows)`` bank DPs per output column)."""
+        tokens = {
+            "prefill": self.prefill_billed_tokens,
+            "decode": self.decode_billed_tokens,
+            "total": self.billed_tokens,
+        }[phase]
+        return {
+            s.name: tokens * s.calls * s.m * math.ceil(s.k / rows)
+            for s in self.sites
+        }
+
+
+# ---------------------------------------------------------------------------
+# rollup: meter counts x design point -> the paper's serving metrics
+# ---------------------------------------------------------------------------
+
+
+def energy_for_tokens(sites, design: DesignPoint, tokens: float) -> dict:
+    """Energy/delay of ``tokens`` token-forwards over ``sites`` at ``design``.
+
+    THE shared rollup helper: ``launch.breakdown`` (training/profiling side)
+    and :func:`serve_energy_report` (serve side) both call it, so one full
+    forward is costed identically no matter which path bills it.  ``sites``
+    may be :class:`MatmulShape` objects or ``(k, m, calls)`` triples.
+    """
+    triples = [
+        (s.k, s.m, s.calls) if isinstance(s, MatmulShape) else tuple(s)
+        for s in sites
+    ]
+    per_tok = design_lib.workload_metrics(design, triples)
+    return {
+        "energy_j": tokens * per_tok["energy_per_token_j"],
+        "energy_per_token_j": per_tok["energy_per_token_j"],
+        "delay_per_token_s": per_tok["delay_per_token_s"],
+        "edp_per_token": per_tok["edp_per_token"],
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyReport:
+    """A served workload rolled up at one design point.
+
+    ``j_per_token`` divides TOTAL billed energy (prefill + decode) by the
+    tokens actually delivered to requests; ``edp_per_token`` multiplies it by
+    the compute-model decode latency of one token-forward;
+    ``tok_s_compute`` is the per-stream decode rate the compute model alone
+    would allow (1 / delay_per_token - the serving analogue of the paper's
+    delay axis, independent of the host wall clock).
+    """
+
+    design: DesignPoint
+    prefill_tokens: int  # billed token-forwards (bucket padding included)
+    decode_tokens: int  # billed token-forwards (active slots only)
+    generated_tokens: int  # tokens delivered to requests
+    requests: int
+    prefill_j: float
+    decode_j: float
+    delay_per_token_s: float
+
+    @property
+    def total_j(self) -> float:
+        return self.prefill_j + self.decode_j
+
+    @property
+    def j_per_token(self) -> float:
+        return self.total_j / max(self.generated_tokens, 1)
+
+    @property
+    def j_per_request(self) -> float:
+        return self.total_j / max(self.requests, 1)
+
+    @property
+    def edp_per_token(self) -> float:
+        return self.j_per_token * self.delay_per_token_s
+
+    @property
+    def tok_s_compute(self) -> float:
+        return 1.0 / self.delay_per_token_s if self.delay_per_token_s > 0 else float("inf")
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "arch_kind": self.design.arch_kind,
+            "n": self.design.n,
+            "n_banks": self.design.n_banks,
+            "b_adc": self.design.b_adc,
+            "knob": self.design.knob,
+            "snr_t_db": round(self.design.snr_t_db, 2),
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "generated_tokens": self.generated_tokens,
+            "requests": self.requests,
+            "prefill_j": self.prefill_j,
+            "decode_j": self.decode_j,
+            "j_per_token": self.j_per_token,
+            "j_per_request": self.j_per_request,
+            "edp_per_token": self.edp_per_token,
+            "delay_per_token_s": self.delay_per_token_s,
+            "tok_s_compute": self.tok_s_compute,
+        }
+
+
+def serve_energy_report(
+    meter: DPMeter,
+    design: DesignPoint,
+    generated_tokens: Optional[int] = None,
+    requests: Optional[int] = None,
+) -> EnergyReport:
+    """Roll a metered serve workload up to J/token, J/request, EDP/token and
+    compute-model tok/s at ``design`` (prefill/decode split preserved)."""
+    sites = meter.sites
+    pre = energy_for_tokens(sites, design, meter.prefill_billed_tokens)
+    dec = energy_for_tokens(sites, design, meter.decode_billed_tokens)
+    if generated_tokens is None:
+        # best available proxy: every billed decode token is delivered, plus
+        # one first token per prefill row
+        generated_tokens = meter.decode_billed_tokens + meter.prefill_rows
+    if requests is None:
+        requests = meter.prefill_rows
+    return EnergyReport(
+        design=design,
+        prefill_tokens=meter.prefill_billed_tokens,
+        decode_tokens=meter.decode_billed_tokens,
+        generated_tokens=generated_tokens,
+        requests=requests,
+        prefill_j=pre["energy_j"],
+        decode_j=dec["energy_j"],
+        delay_per_token_s=dec["delay_per_token_s"],
+    )
+
+
+def format_report(reports: Sequence[EnergyReport]) -> str:
+    """Human-readable table of one workload rolled up at several design
+    points (one row per substrate/design point)."""
+    hdr = (f"{'kind':>4s} {'N':>5s} {'banks':>5s} {'B_ADC':>5s} "
+           f"{'SNR_T dB':>8s} {'J/token':>10s} {'J/request':>10s} "
+           f"{'EDP/token':>10s} {'tok/s (compute)':>15s}")
+    lines = [hdr]
+    for r in reports:
+        lines.append(
+            f"{r.design.arch_kind:>4s} {r.design.n:>5d} "
+            f"{r.design.n_banks:>5d} {r.design.b_adc:>5d} "
+            f"{r.design.snr_t_db:>8.1f} {r.j_per_token:>10.3e} "
+            f"{r.j_per_request:>10.3e} {r.edp_per_token:>10.3e} "
+            f"{r.tok_s_compute:>15.3e}"
+        )
+    return "\n".join(lines)

@@ -166,9 +166,14 @@ class Engine:
     def __init__(self, cfg, params, batch_slots: int, cache_len: int,
                  rng: Optional[jax.Array] = None, max_chunk: int = 8,
                  block_size: int = DEFAULT_BLOCK,
-                 kv_blocks: Optional[int] = None):
+                 kv_blocks: Optional[int] = None, meter=None):
         self.cfg = cfg
         self.params = params
+        # optional launch.metering.DPMeter: billed-work accounting.  Both
+        # hook points are O(1) host-side counter updates driven by values
+        # the engine already holds, so the device contracts (fused scan,
+        # one (slots, T) transfer per chunk) are untouched.
+        self.meter = meter
         self.batch_slots = batch_slots
         self.block = block_size
         self.max_blocks = -(-cache_len // block_size)
@@ -360,6 +365,10 @@ class Engine:
         )
         self.prefill_calls += 1
         self.prefill_rows += r_real
+        if self.meter is not None:
+            # bucket padding is billed work; pow2 pad rows are not
+            self.meter.note_prefill(r_real, bucket,
+                                    [len(r.prompt) for r in group])
         tok0_host = np.asarray(tok0)  # one sync per GROUP (TTFT for all rows)
         t_first = time.perf_counter()
         for r, req in enumerate(group):
@@ -512,6 +521,9 @@ class Engine:
         fn = self._decode_fns.get(n_steps)
         if fn is None:
             fn = self._decode_fns[n_steps] = self._make_decode(n_steps)
+        if self.meter is not None:
+            # active slots at chunk start each run n_steps token-forwards
+            self.meter.note_decode(self.active, n_steps)
         active = jnp.asarray(
             np.array([s is not None for s in self.slots]))
         self.cache, self.last_token, self.pos, toks = fn(
@@ -576,6 +588,14 @@ def main(argv=None):
                     choices=[None, "fakequant", "imc_analytic",
                              "imc_bitserial"])
     ap.add_argument("--imc-vwl", type=float, default=0.7)
+    ap.add_argument("--energy-report", action="store_true",
+                    help="meter the served traffic and print J/token, "
+                         "J/request and EDP/token at the min-energy QS/QR/CM "
+                         "design points (512-row banks, two SNR_T targets); "
+                         "sites are the FULL (non-smoke) model's matmuls, so "
+                         "smoke runs still report deployment-scale energy")
+    ap.add_argument("--energy-snr-db", default="14,26",
+                    help="comma list of SNR_T targets for --energy-report")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
 
@@ -596,9 +616,14 @@ def main(argv=None):
     bucketable = not needs_exact_prefill(cfg)
     max_bucket = max(prefill_bucket(l, bucketable, 10**9) for l in lens)
     cache_len = max_bucket + args.gen + 8
+    meter = None
+    if args.energy_report:
+        from repro.launch.metering import DPMeter
+
+        meter = DPMeter(configs.get(args.arch))
     engine = Engine(cfg, params, args.batch, cache_len, rng=rng,
                     max_chunk=args.chunk, block_size=args.block,
-                    kv_blocks=args.kv_blocks)
+                    kv_blocks=args.kv_blocks, meter=meter)
 
     rnp = np.random.default_rng(0)
     requests = [
@@ -622,6 +647,24 @@ def main(argv=None):
         engine.decode_steps, engine.prefill_calls, engine.prefill_rows,
         tok_s, ttft_ms, engine.host_transfer_bytes, engine.alloc.num_blocks,
     )
+    if meter is not None:
+        from repro.core.design import optimize
+        from repro.launch.metering import format_report, serve_energy_report
+
+        reports = []
+        for snr_db in (float(s) for s in args.energy_snr_db.split(",")):
+            for kind in ("qs", "qr", "cm"):
+                pt = optimize(n=512, snr_t_target_db=snr_db, kinds=(kind,))
+                if pt is None:
+                    continue
+                reports.append(serve_energy_report(
+                    meter, pt, generated_tokens=total_tokens,
+                    requests=len(finished)))
+        print(f"serve-path energy (billed prefill tokens="
+              f"{meter.prefill_billed_tokens} of which padding="
+              f"{meter.prefill_pad_tokens}, decode tokens="
+              f"{meter.decode_billed_tokens}):")
+        print(format_report(reports))
     return finished
 
 

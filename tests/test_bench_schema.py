@@ -1,0 +1,71 @@
+"""Committed bench artifacts: schema validation (stale/truncated files can't
+land) and the serve-energy frontier invariants the CI gate pins."""
+import glob
+import json
+import os
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_FILES = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+
+REQUIRED_META = ("backend", "jax", "python", "platform", "machine")
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_committed_bench_files_exist():
+    names = {os.path.basename(p) for p in BENCH_FILES}
+    assert {"BENCH_kernels.json", "BENCH_serve.json",
+            "BENCH_energy.json"} <= names
+
+
+@pytest.mark.parametrize("path", BENCH_FILES,
+                         ids=[os.path.basename(p) for p in BENCH_FILES])
+def test_bench_schema(path):
+    payload = _load(path)
+    assert payload["schema_version"] == 2
+    assert payload["schema"] == "repro-imc-bench/v2"
+    meta = payload["meta"]
+    for key in REQUIRED_META:
+        assert meta.get(key), f"meta.{key} missing/empty"
+    assert payload["suites"], "no suites"
+    for suite, body in payload["suites"].items():
+        assert "error" not in body, f"{suite}: committed artifact has error"
+        assert body.get("records"), f"{suite}: empty records"
+        assert body.get("wall_s") is not None
+
+
+def _energy_records():
+    payload = _load(os.path.join(ROOT, "BENCH_energy.json"))
+    return payload["suites"]["serve_energy"]["records"]
+
+
+def test_energy_bench_per_design_point_metrics():
+    """--only serve_energy emits J/token, J/request, EDP/token per substrate
+    x design point, split prefill/decode."""
+    recs = [r for r in _energy_records() if r["bench"] == "serve_energy"]
+    assert len(recs) >= 4  # 3 kinds at the low target + >=1 at the high
+    for r in recs:
+        assert r["kind"] in ("qs", "qr", "cm")
+        for key in ("j_per_token", "j_per_request", "edp_per_token",
+                    "prefill_j", "decode_j", "tok_s_compute", "b_adc",
+                    "prefill_tokens", "decode_tokens"):
+            assert key in r, key
+        assert r["j_per_token"] > 0
+        assert r["prefill_j"] + r["decode_j"] == pytest.approx(
+            r["j_per_token"] * r["generated_tokens"], rel=1e-6)
+
+
+def test_energy_bench_reproduces_qs_qr_crossover():
+    """The committed baseline pins the QS-vs-QR serve-workload crossover:
+    QS on the frontier at the low SNR target only, QR best at the high."""
+    (xr,) = [r for r in _energy_records()
+             if r["bench"] == "serve_energy_crossover"]
+    assert xr["qs_feasible_low"] is True
+    assert xr["qs_feasible_high"] is False
+    assert xr["best_kind_high"] == "qr"
+    assert xr["crossover"] is True

@@ -1,0 +1,148 @@
+"""Unit tests for the CI bench-regression gate: the tier-1 job must fail on
+a synthetic regression and pass on the committed baselines."""
+import copy
+import glob
+import json
+import os
+
+import pytest
+
+from benchmarks.check_regression import (check_pair, compare_payloads, main)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _payload():
+    return {
+        "schema_version": 2,
+        "suites": {
+            "serve": {
+                "wall_s": 1.0,
+                "records": [
+                    {"bench": "serve", "config": "paged_engine",
+                     "mode": "digital", "slots": 4,
+                     "tok_s": 2700.0, "wall_s": 0.02,
+                     "kv_bytes_per_active_token": 1212.8,
+                     "prefill_calls": 6, "decode_steps": 14},
+                    {"bench": "serve_summary", "mode": "digital", "slots": 4,
+                     "speedup_tok_s": 1.37, "ttft_ratio": 1.0,
+                     "kv_reduction": 3.08},
+                    {"bench": "serve_energy", "kind": "qs",
+                     "snr_t_target_db": 14.0,
+                     "j_per_token": 5.7e-4, "edp_per_token": 1.9e-9,
+                     "b_adc": 6},
+                    {"bench": "serve_energy_crossover",
+                     "snr_low_db": 14.0, "snr_high_db": 26.0,
+                     "qs_feasible_low": True, "qs_feasible_high": False,
+                     "best_kind_high": "qr", "crossover": True},
+                ],
+            },
+        },
+    }
+
+
+def test_identical_payloads_pass():
+    assert compare_payloads(_payload(), _payload()) == []
+
+
+def test_wall_clock_changes_do_not_gate():
+    cur = _payload()
+    cur["suites"]["serve"]["records"][0]["tok_s"] = 1.0  # 2700x slower
+    cur["suites"]["serve"]["records"][0]["wall_s"] = 99.0
+    assert compare_payloads(_payload(), cur) == []
+
+
+def test_small_jitter_within_tolerance_passes():
+    cur = _payload()
+    cur["suites"]["serve"]["records"][0]["kv_bytes_per_active_token"] *= 1.01
+    cur["suites"]["serve"]["records"][2]["j_per_token"] *= 1.005
+    assert compare_payloads(_payload(), cur) == []
+
+
+def test_kv_bytes_regression_fails():
+    cur = _payload()
+    cur["suites"]["serve"]["records"][0]["kv_bytes_per_active_token"] *= 2
+    fails = compare_payloads(_payload(), cur)
+    assert len(fails) == 1 and "kv_bytes_per_active_token" in fails[0]
+
+
+def test_structural_counter_change_fails():
+    cur = _payload()
+    cur["suites"]["serve"]["records"][0]["prefill_calls"] = 8
+    assert any("prefill_calls" in f for f in compare_payloads(_payload(), cur))
+
+
+def test_speedup_collapse_fails_but_noise_passes():
+    # wall-clock ratios gate on ABSOLUTE bounds (committed same-box ratios
+    # swing run-to-run), so a noisy-but-healthy ratio passes even far from
+    # the baseline value, and a genuine collapse below parity fails
+    cur = _payload()
+    cur["suites"]["serve"]["records"][1]["speedup_tok_s"] = 1.0  # >= 0.7: ok
+    assert compare_payloads(_payload(), cur) == []
+    cur["suites"]["serve"]["records"][1]["speedup_tok_s"] = 0.6  # < 0.7
+    assert any("speedup_tok_s" in f for f in compare_payloads(_payload(), cur))
+    cur["suites"]["serve"]["records"][1]["speedup_tok_s"] = 1.37
+    cur["suites"]["serve"]["records"][1]["ttft_ratio"] = 3.5  # > ceiling 3.0
+    assert any("ttft_ratio" in f for f in compare_payloads(_payload(), cur))
+
+
+def test_energy_regression_fails():
+    cur = _payload()
+    cur["suites"]["serve"]["records"][2]["j_per_token"] *= 1.10
+    assert any("j_per_token" in f for f in compare_payloads(_payload(), cur))
+
+
+def test_crossover_flip_fails():
+    cur = _payload()
+    cur["suites"]["serve"]["records"][3]["crossover"] = False
+    cur["suites"]["serve"]["records"][3]["best_kind_high"] = "cm"
+    fails = compare_payloads(_payload(), cur)
+    assert any("crossover" in f for f in fails)
+    assert any("best_kind_high" in f for f in fails)
+
+
+def test_missing_record_fails():
+    cur = _payload()
+    del cur["suites"]["serve"]["records"][0]
+    assert any("missing record" in f for f in compare_payloads(_payload(), cur))
+
+
+def test_missing_suite_fails():
+    cur = copy.deepcopy(_payload())
+    del cur["suites"]["serve"]
+    assert any("suite missing" in f for f in compare_payloads(_payload(), cur))
+
+
+def test_errored_baseline_suite_does_not_gate():
+    base = _payload()
+    base["suites"]["broken"] = {"error": "ValueError: boom"}
+    assert compare_payloads(base, _payload()) == []
+
+
+def test_new_current_records_allowed():
+    cur = _payload()
+    cur["suites"]["serve"]["records"].append(
+        {"bench": "serve", "config": "new_engine", "mode": "digital",
+         "slots": 4, "kv_bytes_per_active_token": 1.0})
+    assert compare_payloads(_payload(), cur) == []
+
+
+@pytest.mark.parametrize("path", sorted(glob.glob(
+    os.path.join(ROOT, "BENCH_*.json"))),
+    ids=lambda p: os.path.basename(p))
+def test_committed_baselines_self_compare_pass(path):
+    assert check_pair(path, path) == []
+
+
+def test_cli_exit_codes(tmp_path):
+    base = tmp_path / "base.json"
+    good = tmp_path / "good.json"
+    bad = tmp_path / "bad.json"
+    base.write_text(json.dumps(_payload()))
+    good.write_text(json.dumps(_payload()))
+    regressed = _payload()
+    regressed["suites"]["serve"]["records"][0]["kv_bytes_per_active_token"] *= 3
+    bad.write_text(json.dumps(regressed))
+    assert main(["--pair", f"{base}:{good}"]) == 0
+    assert main(["--pair", f"{base}:{bad}"]) == 1
+    assert main(["--pair", f"{base}:{good}", "--pair", f"{base}:{bad}"]) == 1

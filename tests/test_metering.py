@@ -1,0 +1,224 @@
+"""Serve-path energy-delay metering: DP counts, billing policy, rollup
+closed forms, and the breakdown==metering shared-code-path pin."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import scaling
+from repro.core.design import (T_REDUCE_LEVEL, optimize, pareto_sweep,
+                               workload_metrics)
+from repro.core.mapping import MatmulShape, per_token_matmul_shapes
+from repro.launch import breakdown
+from repro.launch.metering import (DPMeter, energy_for_tokens,
+                                   serve_energy_report)
+from repro.launch.serve import Engine, Request, serve
+from repro.models import init_params
+
+SITES_512 = [MatmulShape("site", 512, 4, 1)]
+
+
+def _qs_512():
+    pt = optimize(n=512, snr_t_target_db=14.0, kinds=("qs",))
+    assert pt is not None and pt.arch_kind == "qs"
+    return pt
+
+
+# ---------------------------------------------------------------------------
+# billing policy: bucket padding billed, dummy pow2 rows excluded
+# ---------------------------------------------------------------------------
+
+
+def test_meter_counts_hand_computed():
+    m = DPMeter(sites=SITES_512)
+    # one admitted group: 3 real rows in a bucket of 8 (pow2 pad row NOT
+    # billed), true lengths 5+5+6
+    m.note_prefill(3, 8, true_lens=[5, 5, 6])
+    assert m.prefill_billed_tokens == 24  # padding IS billed
+    assert m.prefill_true_tokens == 16
+    assert m.prefill_pad_tokens == 8
+    assert m.prefill_rows == 3 and m.prefill_groups == 1
+    # two fused chunks: 3 active x 4 steps, then 1 active x 2 steps
+    m.note_decode(3, 4)
+    m.note_decode(1, 2)
+    assert m.decode_billed_tokens == 14
+    assert m.decode_chunks == 2
+    assert m.billed_tokens == 38
+
+
+def test_dp_counts_per_site_and_tiling():
+    sites = [MatmulShape("a", 512, 4, 2), MatmulShape("b", 1280, 8, 1)]
+    m = DPMeter(sites=sites)
+    m.note_prefill(1, 8)
+    m.note_decode(1, 2)
+    dps = m.dp_counts("total", rows=512)
+    # a: 10 tokens x 2 calls x 4 outputs x ceil(512/512)=1 bank DP
+    assert dps["a"] == 10 * 2 * 4 * 1
+    # b: ceil(1280/512) = 3 bank DPs per output
+    assert dps["b"] == 10 * 1 * 8 * 3
+    pre = m.dp_counts("prefill", rows=512)
+    dec = m.dp_counts("decode", rows=512)
+    assert pre["a"] + dec["a"] == dps["a"]
+
+
+# ---------------------------------------------------------------------------
+# engine integration: counts are pure functions of the admission schedule
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = configs.get_smoke("musicgen-medium")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _mk_reqs(cfg, lens, gen):
+    rnp = np.random.default_rng(0)
+    return [Request(rid=i, prompt=rnp.integers(0, cfg.vocab_size, l),
+                    max_new=gen)
+            for i, l in enumerate(lens)]
+
+
+def _served_meter(cfg, params, lens, gen=8, slots=4):
+    meter = DPMeter(cfg)
+    engine = Engine(cfg, params, slots, 64, max_chunk=gen, meter=meter)
+    serve(engine, _mk_reqs(cfg, lens, gen))
+    return meter, engine
+
+
+def test_engine_meter_equal_prompts_hand_computed(smoke_setup):
+    cfg, params = smoke_setup
+    # 3 equal-length prompts -> ONE (R=3, bucket=8) group (pow2 pad row 4
+    # excluded from billing); each request then decodes 7 more tokens in
+    # lockstep chunks of 4+2+1
+    meter, engine = _served_meter(cfg, params, [5, 5, 5], gen=8)
+    assert engine.prefill_calls == 1 and engine.prefill_rows == 3
+    assert meter.prefill_groups == 1 and meter.prefill_rows == 3
+    assert meter.prefill_billed_tokens == 3 * 8
+    assert meter.prefill_true_tokens == 15
+    assert meter.decode_billed_tokens == 3 * 7
+    assert meter.decode_chunks == 3  # scan lengths 4, 2, 1
+
+
+def test_engine_meter_additive_across_workloads(smoke_setup):
+    cfg, params = smoke_setup
+    lens_a, lens_b = [5, 9, 4], [17, 6]
+    m_a, _ = _served_meter(cfg, params, lens_a)
+    m_b, _ = _served_meter(cfg, params, lens_b)
+    # one engine serving A then B accumulates exactly meter(A) + meter(B)
+    meter = DPMeter(cfg)
+    engine = Engine(cfg, params, 4, 64, max_chunk=8, meter=meter)
+    serve(engine, _mk_reqs(cfg, lens_a, 8))
+    serve(engine, _mk_reqs(cfg, lens_b, 8))
+    for field in ("prefill_billed_tokens", "prefill_true_tokens",
+                  "prefill_rows", "prefill_groups",
+                  "decode_billed_tokens", "decode_chunks"):
+        assert getattr(meter, field) == \
+            getattr(m_a, field) + getattr(m_b, field), field
+
+
+# ---------------------------------------------------------------------------
+# rollup closed forms
+# ---------------------------------------------------------------------------
+
+
+def test_j_per_token_qs512_closed_form():
+    """J/token at the 512-row QS design point == the hand rollup."""
+    pt = _qs_512()
+    meter = DPMeter(sites=SITES_512)
+    meter.note_prefill(1, 8, true_lens=[5])  # 8 billed prefill tokens
+    meter.note_decode(1, 5)  # 5 billed decode tokens
+    rep = serve_energy_report(meter, pt, generated_tokens=6, requests=1)
+    # one site: k=512 -> 1 bank DP per output at pt.n=512 (no tiling, no
+    # extra reduction), m=4 outputs, calls=1
+    e_tok = 4 * pt.energy_per_dp
+    assert rep.prefill_j == pytest.approx(8 * e_tok, rel=1e-12)
+    assert rep.decode_j == pytest.approx(5 * e_tok, rel=1e-12)
+    assert rep.j_per_token == pytest.approx(13 * e_tok / 6, rel=1e-12)
+    assert rep.j_per_request == pytest.approx(13 * e_tok, rel=1e-12)
+    assert rep.delay_per_token_s == pytest.approx(pt.delay_per_dp, rel=1e-12)
+    assert rep.edp_per_token == pytest.approx(
+        rep.j_per_token * pt.delay_per_dp, rel=1e-12)
+    assert rep.tok_s_compute == pytest.approx(1.0 / pt.delay_per_dp, rel=1e-12)
+
+
+def test_workload_metrics_tiling_closed_form():
+    pt = _qs_512()
+    tech = scaling.node(pt.tech)
+    wm = workload_metrics(pt, [(1280, 8, 2)])
+    tiles = math.ceil(1280 / pt.n)  # 3
+    width = pt.b_adc + math.ceil(math.log2(max(tiles * pt.n_banks, 2)))
+    e_dp = tiles * pt.energy_per_dp + (tiles - 1) * width * tech.e_add_per_bit
+    assert wm["energy_per_token_j"] == pytest.approx(2 * 8 * e_dp, rel=1e-12)
+    assert wm["delay_per_token_s"] == pytest.approx(
+        2 * (pt.delay_per_dp + math.ceil(math.log2(tiles)) * T_REDUCE_LEVEL),
+        rel=1e-12)
+    assert wm["edp_per_token"] == pytest.approx(
+        wm["energy_per_token_j"] * wm["delay_per_token_s"], rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# breakdown == metering: one shared rollup code path
+# ---------------------------------------------------------------------------
+
+
+def test_breakdown_equals_metering_single_forward():
+    """The profiling-side rollup and the serve meter bill ONE full forward
+    identically (the shared-helper fix for the silent double-count risk)."""
+    cfg = configs.get("musicgen-medium")
+    pt = _qs_512()
+    fwd = breakdown.forward_energy(cfg, pt, tokens=1)
+    meter = DPMeter(cfg)
+    meter.note_prefill(1, 1, true_lens=[1])  # exactly one billed token
+    rep = serve_energy_report(meter, pt, generated_tokens=1, requests=1)
+    assert rep.prefill_j == pytest.approx(fwd["energy_j"], rel=1e-12)
+    assert rep.decode_j == 0.0
+    assert rep.delay_per_token_s == pytest.approx(
+        fwd["delay_per_token_s"], rel=1e-12)
+    # and both agree with the low-level shared helper on the same sites
+    direct = energy_for_tokens(per_token_matmul_shapes(cfg), pt, 1)
+    assert fwd["energy_j"] == direct["energy_j"]
+
+
+def test_model_energy_shapes_walk_is_shared():
+    """benchmarks.model_energy delegates to the one shapes walk."""
+    from benchmarks.model_energy import model_matmul_shapes
+
+    assert model_matmul_shapes("musicgen-medium") == \
+        per_token_matmul_shapes(configs.get("musicgen-medium"))
+
+
+# ---------------------------------------------------------------------------
+# workload mode of the pareto sweep
+# ---------------------------------------------------------------------------
+
+
+def test_pareto_sweep_workload_reranks_by_edp():
+    sites = [(s.k, s.m, s.calls)
+             for s in per_token_matmul_shapes(configs.get("musicgen-medium"))]
+    targets = (14.0, 26.0)
+    swept = pareto_sweep(512, targets_db=targets, workload=sites)
+    assert [t for t, _ in swept] == list(targets)
+    for t, pt in swept:
+        # the chosen point is the min-workload-EDP one among per-kind optima
+        edps = {}
+        for kind in ("qs", "qr", "cm"):
+            cand = optimize(512, t, kinds=(kind,))
+            if cand is not None:
+                edps[kind] = workload_metrics(cand, sites)["edp_per_token"]
+        assert pt.arch_kind == min(edps, key=edps.get)
+        assert pt.snr_t_db >= t
+
+
+def test_serve_frontier_qs_low_qr_high():
+    """The serve-workload frontier restates the paper's guideline: QS is
+    feasible only on the low-SNR side; QR alone spans the high side."""
+    lo_qs = optimize(512, 14.0, kinds=("qs",))
+    hi_qs = optimize(512, 26.0, kinds=("qs",))
+    hi_qr = optimize(512, 26.0, kinds=("qr",))
+    assert lo_qs is not None
+    assert hi_qs is None
+    assert hi_qr is not None
