@@ -22,6 +22,10 @@ metric under per-metric tolerance rules:
 A baseline record missing from the current run is a failure (a silently
 dropped bench is exactly the "stale artifact" failure mode this gate
 exists for); extra current records are allowed (new benches land first).
+
+Bench schema v2.1: serve-suite records must carry a ``substrate`` field
+naming the Substrate they ran on / billed; :func:`validate_schema` fails
+either side of a pair with a clear message when it is missing.
 """
 from __future__ import annotations
 
@@ -33,11 +37,17 @@ from typing import Dict, List, Tuple
 
 # fields that IDENTIFY a record (never compared as metrics)
 ID_FIELDS = (
-    "bench", "config", "arch", "mode", "kind", "name",
+    "bench", "config", "arch", "mode", "kind", "name", "substrate",
     "slots", "requests", "gen", "prompt_len", "prompt_lens",
     "B", "K", "M", "bx", "bw", "rows", "bank_rows", "n", "n_banks",
     "snr_t_target_db", "snr_low_db", "snr_high_db",
 )
+
+# bench schema v2.1: every serve-suite record must name the execution
+# substrate it ran on / billed (the Substrate object's mode name) - a record
+# without it can't be attributed to a design point, which is exactly the
+# old side-channel ambiguity the Substrate API removed
+SUBSTRATE_REQUIRED_PREFIXES = ("serve", "site_snr")
 
 # metric -> (rule, tolerance); rules:
 #   exact      current == baseline
@@ -103,6 +113,17 @@ RULES: Dict[str, Tuple[str, float]] = {
     "tok_s_compute": ("rel", 0.02),
     "j_per_token_best": ("rel", 0.02),
     "edp_per_token_best": ("rel", 0.02),
+    # per-site SNR_T map (MPC-style overrides; deterministic closed forms)
+    "b_adc_uniform": ("exact", 0.0),
+    "b_adc_override": ("exact", 0.0),
+    "snr_t_uniform_db": ("rel", 0.01),
+    "snr_t_override_db": ("rel", 0.01),
+    "snr_t_boosted_min_db": ("rel", 0.01),
+    "sites": ("exact", 0.0),
+    "sites_boosted": ("exact", 0.0),
+    "j_per_token_uniform": ("rel", 0.02),
+    "j_per_token_override": ("rel", 0.02),
+    "j_per_token_ratio": ("rel", 0.02),
     # frontier/crossover shape (the acceptance invariant itself)
     "best_kind_energy": ("exact_str", 0.0),
     "best_kind_edp": ("exact_str", 0.0),
@@ -168,9 +189,32 @@ def compare_metric(name: str, base, cur) -> str:
     raise ValueError(rule)
 
 
+def validate_schema(payload: dict, label: str) -> List[str]:
+    """Bench-schema v2.1 structural checks (run on BOTH sides of a pair: a
+    stale committed baseline must fail just as loudly as a bad CI run)."""
+    failures: List[str] = []
+    for suite, body in payload.get("suites", {}).items():
+        if "error" in body:
+            continue
+        for rec in body.get("records", []):
+            bench = rec.get("bench", "")
+            if bench.startswith(SUBSTRATE_REQUIRED_PREFIXES) \
+                    and "substrate" not in rec:
+                ident = {k: rec[k] for k in ("bench", "config", "kind",
+                                             "name") if k in rec}
+                failures.append(
+                    f"{label}: record {ident} is missing its 'substrate' "
+                    f"field (required since bench schema v2.1: every serve "
+                    f"record must name the Substrate it ran on/billed - "
+                    f"regenerate the artifact with benchmarks/run.py)")
+    return failures
+
+
 def compare_payloads(baseline: dict, current: dict) -> List[str]:
     """All regressions of ``current`` vs ``baseline`` (empty list = pass)."""
     failures: List[str] = []
+    failures.extend(validate_schema(baseline, "baseline"))
+    failures.extend(validate_schema(current, "current"))
     for suite, body in baseline.get("suites", {}).items():
         if "error" in body:
             continue  # an errored baseline suite can't gate

@@ -7,7 +7,10 @@ config) and record the cross-entropy degradation; the smallest SNR_T whose
 degradation is below threshold is that layer's requirement.
 
 Also sweeps whole-model IMC execution (all layers noisy) across SNR levels -
-the deployment question the paper's framework answers.
+the deployment question the paper's framework answers - and emits the
+per-site SNR_T map of an MPC-style per-site override substrate vs the
+uniform design point (:func:`site_snr_records`, committed in
+``BENCH_energy.json`` under the ``serve_energy`` suite).
 """
 from __future__ import annotations
 
@@ -18,7 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core.imc_linear import IMCConfig
+from repro.core.design import optimize, with_b_adc
+from repro.core.mapping import per_token_matmul_shapes
+from repro.core.substrate import AnalyticIMC, substrate_for_design
 from repro.models import init_params, loss_fn
 
 Row = Tuple[str, float, str]
@@ -43,7 +48,7 @@ def whole_model_snr_sweep(arch: str = "gemma2-9b", b: int = 4, s: int = 128,
     rng = jax.random.PRNGKey(3)
     for snr in levels:
         noisy_cfg = cfg.replace(
-            imc=IMCConfig(mode="imc_analytic", bx=8, bw=8, snr_a_db=snr)
+            imc=AnalyticIMC(bx=8, bw=8, snr_a_db=snr)
         )
         ce = np.mean([
             _loss(noisy_cfg, params, batch, rng=jax.random.fold_in(rng, i))
@@ -55,6 +60,66 @@ def whole_model_snr_sweep(arch: str = "gemma2-9b", b: int = 4, s: int = 128,
             f"dCE={ce-base:+.4f} (req: small at >=24 dB, paper SSIII-B)",
         ))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# per-site SNR_T under an MPC-style override map (substrate API demo)
+# ---------------------------------------------------------------------------
+
+# extra output-ADC bits per site group vs the uniform design point: the
+# embedding-adjacent sites (output head, attention projections feeding the
+# residual stream) get a finer ADC than the FFN sites - the per-site
+# precision assignment the paper's MPC criterion (eq. 15) prices per layer
+OVERRIDE_EXTRA_BITS = {"lm_head": 2, "attn": 1}
+
+
+def site_snr_records(arch: str = "musicgen-medium", snr_t_db: float = 14.0,
+                     n: int = 512) -> List[dict]:
+    """Per-site SNR_T of every matmul site of ``arch`` at (a) the uniform
+    min-energy design point for ``snr_t_db`` and (b) a substrate with
+    MPC-style per-site B_ADC overrides (``OVERRIDE_EXTRA_BITS``), plus a
+    summary record with the J/token cost of the reassignment.  Deterministic
+    closed forms - no model execution."""
+    from repro.launch.metering import energy_for_tokens, substrate_energy_for_tokens
+
+    cfg = configs.get(arch)
+    shapes = per_token_matmul_shapes(cfg)
+    pt = optimize(n=n, snr_t_target_db=snr_t_db)
+    uniform = substrate_for_design(pt)
+    overrides = {}
+    for group, extra in OVERRIDE_EXTRA_BITS.items():
+        pt_g = with_b_adc(pt, pt.b_adc + extra)
+        overrides[group] = {"b_adc": pt_g.b_adc, "design": pt_g}
+    boosted = uniform.with_overrides(overrides)
+
+    meta = {"bench": "site_snr", "arch": arch, "substrate": boosted.name,
+            "kind": pt.arch_kind, "bank_rows": n, "snr_t_target_db": snr_t_db}
+    records: List[dict] = []
+    for s in shapes:
+        pu = uniform.design_for_site(s.name)
+        po = boosted.design_for_site(s.name)
+        records.append({
+            **meta, "name": s.name, "K": s.k, "M": s.m,
+            "b_adc_uniform": pu.b_adc, "b_adc_override": po.b_adc,
+            "snr_t_uniform_db": round(pu.snr_t_db, 3),
+            "snr_t_override_db": round(po.snr_t_db, 3),
+        })
+    e_uniform = energy_for_tokens(shapes, pt, 1)["energy_per_token_j"]
+    e_boosted = substrate_energy_for_tokens(shapes, boosted,
+                                            1)["energy_per_token_j"]
+    boosted_sites = [r for r in records
+                     if r["b_adc_override"] > r["b_adc_uniform"]]
+    records.append({
+        **meta, "bench": "site_snr_summary",
+        "sites": len(shapes), "sites_boosted": len(boosted_sites),
+        "snr_t_uniform_db": round(pt.snr_t_db, 3),
+        "snr_t_boosted_min_db": round(
+            min(r["snr_t_override_db"] for r in boosted_sites), 3),
+        "j_per_token_uniform": e_uniform,
+        "j_per_token_override": e_boosted,
+        "j_per_token_ratio": round(e_boosted / e_uniform, 4),
+    })
+    return records
 
 
 def run() -> List[Row]:

@@ -42,8 +42,7 @@ def main() -> None:
 
     import jax
 
-    from benchmarks import (kernel_bench, layer_snr, model_energy, roofline,
-                            serve_bench)
+    from benchmarks import kernel_bench, layer_snr, model_energy, roofline, serve_bench
     from benchmarks.paper_figures import ALL as FIG_BENCHES
 
     suites = {}
@@ -72,9 +71,11 @@ def main() -> None:
         # the serve bench surface reports energy too: selecting the serve
         # suite pulls in the (memoized, deterministic) serve_energy rollup
         only.add("serve_energy")
+    # schema v2.1: serve-suite records must name the execution substrate
+    # they ran/billed ("substrate" field; enforced by check_regression.py)
     payload = {
-        "schema": "repro-imc-bench/v2",
-        "schema_version": 2,
+        "schema": "repro-imc-bench/v2.1",
+        "schema_version": 2.1,
         "backend": jax.default_backend(),
         # machine/XLA provenance: lets the regression gate (and humans) tell
         # a real perf change from a toolchain change, and the schema test

@@ -49,9 +49,9 @@ import numpy as np
 from repro import configs
 from repro.core.design import optimize
 from repro.core.mapping import per_token_matmul_shapes
+from repro.core.substrate import AnalyticIMC, BitSerialIMC, substrate_for_design
 from repro.launch.metering import DPMeter, serve_energy_report
-from repro.launch.serve import (Engine, Request, needs_exact_prefill,
-                                prefill_bucket)
+from repro.launch.serve import Engine, Request, needs_exact_prefill, prefill_bucket
 from repro.models import decode_step, init_cache, init_params, prefill
 
 Row = Tuple[str, float, str]
@@ -405,12 +405,14 @@ def drive_engine(engine, requests: List[Request], sample=None) -> List[Request]:
 # ---------------------------------------------------------------------------
 
 
+# the first-class substrates the bench executes on (string flags retired)
+_SUBSTRATES = {"imc_analytic": AnalyticIMC, "imc_bitserial": BitSerialIMC}
+
+
 def _mk_cfg(mode: Optional[str]):
     cfg = configs.get_smoke(ARCH)
     if mode:
-        from repro.core.imc_linear import IMCConfig
-
-        cfg = cfg.replace(imc=IMCConfig(mode=mode, bx=7, bw=7, v_wl=0.7))
+        cfg = cfg.replace(imc=_SUBSTRATES[mode](bx=7, bw=7, v_wl=0.7))
     return cfg
 
 
@@ -517,6 +519,7 @@ def bench_records() -> List[dict]:
         cfg = _mk_cfg(mode)
         rng = jax.random.PRNGKey(7) if mode else None
         meta = {"bench": "serve", "arch": ARCH, "mode": mode or "digital",
+                "substrate": mode or "digital",
                 "slots": BATCH, "requests": n_requests,
                 "prompt_lens": MIXED_LENS[:n_requests], "gen": GEN}
         # warmup both engines (compile time excluded, as in kernel_bench)
@@ -555,6 +558,7 @@ def bench_records() -> List[dict]:
     _run_wave(cfg, None, wave_cache_len, WARMUP_REQUESTS)
     wave = _run_wave(cfg, None, wave_cache_len, REQUESTS)
     records.append({"bench": "serve", "arch": ARCH, "mode": "digital",
+                    "substrate": "digital",
                     "config": "wave_baseline", "slots": BATCH,
                     "requests": REQUESTS, "prompt_len": PROMPT_LEN,
                     "gen": GEN, **wave})
@@ -620,7 +624,13 @@ def energy_records() -> List[dict]:
             pt = optimize(n=ENERGY_N, snr_t_target_db=snr_db, kinds=(kind,))
             if pt is None:
                 continue
-            rep = serve_energy_report(meter, pt, generated_tokens=generated,
+            # bill through the executable substrate the design point
+            # implies: the rollup reads the billed design (and any per-site
+            # overrides) from the substrate object itself (schema v2.1:
+            # every serve record names its substrate)
+            rep = serve_energy_report(meter,
+                                      substrate=substrate_for_design(pt),
+                                      generated_tokens=generated,
                                       requests=n_requests)
             rec = {**meta, "snr_t_target_db": snr_db, "kind": kind,
                    **{k: v for k, v in rep.summary().items()
@@ -633,6 +643,7 @@ def energy_records() -> List[dict]:
             best_edp = min(per_kind, key=lambda k: per_kind[k]["edp_per_token"])
             records.append({
                 **meta, "bench": "serve_energy_summary",
+                "substrate": "mixed",  # aggregates across substrates
                 "snr_t_target_db": snr_db,
                 "kinds_feasible": sorted(per_kind),
                 "best_kind_energy": best_e,
@@ -643,6 +654,7 @@ def energy_records() -> List[dict]:
     lo, hi = frontier[ENERGY_SNR_LOW], frontier[ENERGY_SNR_HIGH]
     records.append({
         **meta, "bench": "serve_energy_crossover",
+        "substrate": "mixed",  # aggregates across substrates
         "snr_low_db": ENERGY_SNR_LOW, "snr_high_db": ENERGY_SNR_HIGH,
         # the crossover as it manifests in this calibration: QS serves the
         # low-SNR side of the frontier only (feasible at the low target,
@@ -654,6 +666,12 @@ def energy_records() -> List[dict]:
         "crossover": ("qs" in lo) and ("qs" not in hi)
         and bool(hi) and min(hi, key=lambda k: hi[k]["j_per_token"]) == "qr",
     })
+    # per-site SNR_T map of the MPC-style override substrate vs the uniform
+    # design point (deterministic closed forms; see benchmarks/layer_snr.py)
+    from benchmarks.layer_snr import site_snr_records
+
+    records.extend(site_snr_records(arch=ARCH, snr_t_db=ENERGY_SNR_LOW,
+                                    n=ENERGY_N))
     _ENERGY_CACHE.extend(copy.deepcopy(records))
     return records
 
@@ -684,6 +702,22 @@ def energy_rows(records: List[dict]) -> List[Row]:
                 1.0 if r["crossover"] else 0.0,
                 f"qs@low={r['qs_feasible_low']} qs@high={r['qs_feasible_high']} "
                 f"best@high={r['best_kind_high']}",
+            ))
+        elif r["bench"] == "site_snr":
+            rows.append((
+                f"site_snr/{r['arch']}/{r['name']}",
+                r["snr_t_override_db"],
+                f"SNR_T dB w/ per-site override (uniform "
+                f"{r['snr_t_uniform_db']} dB, B_ADC "
+                f"{r['b_adc_uniform']}->{r['b_adc_override']})",
+            ))
+        elif r["bench"] == "site_snr_summary":
+            rows.append((
+                f"site_snr/{r['arch']}/summary",
+                r["j_per_token_ratio"],
+                f"J/token cost of boosting {r['sites_boosted']}/{r['sites']} "
+                f"sites; min boosted SNR_T {r['snr_t_boosted_min_db']} dB "
+                f"vs uniform {r['snr_t_uniform_db']} dB",
             ))
     return rows
 

@@ -1,12 +1,25 @@
 """Design-space exploration (paper SSV-D + SSVI): energy-vs-SNR pareto
-frontiers per technology node, and whole-model IMC deployment costs for the
-assigned architectures.
+frontiers per technology node, whole-model IMC deployment costs for the
+assigned architectures, and an MPC-style per-site precision assignment
+through the first-class Substrate API.
 
 Run:  PYTHONPATH=src python examples/design_sweep.py
 """
-from repro.core import pareto_sweep, scaling
-from benchmarks.model_energy import model_matmul_shapes
+import os
+import sys
+
+# make `python examples/design_sweep.py` work from anywhere (repo root on
+# sys.path for the benchmarks package, as in benchmarks/run.py)
+sys.path.insert(
+    0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+from benchmarks.model_energy import model_matmul_shapes  # noqa: E402
+from repro.core import optimize, pareto_sweep, scaling
+from repro.core.design import with_b_adc
 from repro.core.mapping import map_model
+from repro.core.substrate import substrate_for_design
+from repro.launch.metering import energy_for_tokens, substrate_energy_for_tokens
 
 print("== energy-vs-SNR_T pareto (N=256 DP) per node ==")
 for node_name in ("65nm", "22nm", "7nm"):
@@ -25,3 +38,22 @@ for arch in ("phi3-mini-3.8b", "gemma2-9b", "granite-moe-1b-a400m",
     print(f"{arch:24s} {s['total_energy_j']*1e6:8.2f} uJ/token  "
           f"{s['tops_per_watt']:6.1f} TOPS/W  "
           f"{s['energy_per_mac_fj']:6.1f} fJ/MAC")
+
+print("\n== MPC-style per-site assignment (Substrate API) ==")
+# uniform min-energy design point at 14 dB vs the same substrate with the
+# output head and attention projections reassigned a finer output ADC
+pt = optimize(n=512, snr_t_target_db=14.0)
+uniform = substrate_for_design(pt)
+boosted = uniform.with_overrides({
+    "lm_head": {"b_adc": pt.b_adc + 2, "design": with_b_adc(pt, pt.b_adc + 2)},
+    "attn": {"b_adc": pt.b_adc + 1, "design": with_b_adc(pt, pt.b_adc + 1)},
+})
+shapes = model_matmul_shapes("musicgen-medium")
+e_u = energy_for_tokens(shapes, pt, 1)["energy_per_token_j"]
+e_b = substrate_energy_for_tokens(shapes, boosted, 1)["energy_per_token_j"]
+head = boosted.design_for_site("lm_head")
+print(f"uniform {uniform.name}: B_ADC={pt.b_adc} SNR_T={pt.snr_t_db:.1f} dB "
+      f"everywhere, {e_u*1e6:.2f} uJ/token")
+print(f"per-site overrides: lm_head B_ADC={head.b_adc} "
+      f"SNR_T={head.snr_t_db:.1f} dB, FFN stays at {pt.b_adc}; "
+      f"{e_b*1e6:.2f} uJ/token (+{100*(e_b/e_u-1):.1f}%)")

@@ -11,10 +11,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import QSArch, optimize
-from repro.core.imc_linear import IMCConfig, linear
+from repro.core import optimize
+from repro.core.imc_linear import linear
 from repro.core.precision import assign_precisions
 from repro.core.quant import UNIFORM_STATS
+from repro.core.substrate import BitSerialIMC
 
 # -- 1. the requirement: a 1024-dim DP layer needs ~22 dB (4-b-equivalent
 #       accuracy, paper SSIII-B) ------------------------------------------------
@@ -37,14 +38,17 @@ x = jax.random.normal(k1, (64, N))
 w = jax.random.normal(k2, (N, 128)) / np.sqrt(N)
 y_exact = x @ w
 
-cfg = IMCConfig(mode="imc_bitserial", bx=pa.bx, bw=pa.bw, v_wl=0.7)
-y_imc = linear(w, x, cfg, rng=k3)
+# a first-class substrate: the bit-serial QS-Arch simulation, carrying the
+# design point it bills (repro.core.substrate; string mode flags are retired)
+substrate = BitSerialIMC(bx=pa.bx, bw=pa.bw, v_wl=0.7, design=pt)
+y_imc = linear(w, x, substrate, rng=k3)
 err = y_imc - y_exact
 snr = 10 * np.log10(float(jnp.var(y_exact)) /
                     float(jnp.mean((err - jnp.mean(err)) ** 2)))
+snr_a = substrate.imc.resolved_snr_a_db(N)
 print(f"bit-serial QS-Arch execution: delivered SNR = {snr:.1f} dB "
-      f"(analytic SNR_a = {cfg.resolved_snr_a_db(N):.1f} dB)")
+      f"(analytic SNR_a = {snr_a:.1f} dB)")
 
 # the fundamental limit (paper's headline): SNR_T <= SNR_a, always
-assert snr <= cfg.resolved_snr_a_db(N) + 1.5
+assert snr <= snr_a + 1.5
 print("OK: SNR_T is bounded by the analog core's SNR_a - the paper's limit.")

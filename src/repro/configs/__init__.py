@@ -1,13 +1,5 @@
 """Architecture config registry: ``get(name)`` / ``get_smoke(name)`` /
 ``ARCH_NAMES``; plus the paper's own IMC design-point config."""
-from repro.configs.base import ArchConfig  # noqa: F401
-from repro.configs.shapes import (  # noqa: F401
-    SHAPES,
-    ShapeSpec,
-    input_specs,
-    shape_applicable,
-)
-
 from repro.configs import (  # noqa: F401
     dbrx_132b,
     deepseek_coder_33b,
@@ -19,6 +11,13 @@ from repro.configs import (  # noqa: F401
     musicgen_medium,
     phi3_mini,
     recurrentgemma_2b,
+)
+from repro.configs.base import ArchConfig  # noqa: F401
+from repro.configs.shapes import (  # noqa: F401
+    SHAPES,
+    ShapeSpec,
+    input_specs,
+    shape_applicable,
 )
 
 _MODULES = {

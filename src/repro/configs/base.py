@@ -70,7 +70,12 @@ class ArchConfig:
 
     # --- execution ---
     dtype: str = "bfloat16"
-    imc: IMCConfig = DIGITAL
+    # the execution substrate every matmul routes through: either a
+    # first-class repro.core.substrate.Substrate (DigitalSubstrate /
+    # AnalyticIMC / BitSerialIMC - carrying calibration policy, per-site
+    # overrides and the billed design point) or, for backward compatibility,
+    # a bare IMCConfig (== the equivalent dynamic-policy substrate)
+    imc: "IMCConfig" = DIGITAL  # IMCConfig | repro.core.substrate.Substrate
     remat: bool = True  # rematerialize each block in train step
     flash_q_block: int = 512
     flash_kv_block: int = 1024

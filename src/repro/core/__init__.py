@@ -14,22 +14,26 @@ architectures (Gonugondla et al., 2020):
   design          min-energy design-point solver (SSVI guidelines as a solver)
   mapping         matmul -> bank tiling + whole-model energy rollups
   imc_linear      the executable IMC linear layer (digital/fakequant/analytic/bitserial)
+  substrate       first-class execution substrates: per-site design points,
+                  frozen-vs-dynamic calibration, batch-invariant IMC serving
 """
-from repro.core.quant import (  # noqa: F401
-    QuantSpec,
-    SignalStats,
-    UNIFORM_STATS,
-    db,
-    undb,
-    fakequant,
-    quantize,
-    dequantize,
-    bit_planes,
-    combine_bit_planes,
-    sqnr_qiy,
-    sqnr_qiy_db_approx,
+from repro.core.adc import adc_energy  # noqa: F401
+from repro.core.archs import CMArch, IMCArch, QRArch, QSArch  # noqa: F401
+from repro.core.compute_models import (  # noqa: F401
+    ISModel,
+    QRModel,
+    QSModel,
+    TECH_65NM,
+    TechParams,
 )
-from repro.core.snr import compose_snr, compose_snr_db, empirical_snr_db  # noqa: F401
+from repro.core.design import DesignPoint, optimize, pareto_sweep  # noqa: F401
+from repro.core.mapping import (  # noqa: F401
+    BankSpec,
+    MatmulShape,
+    ModelReport,
+    map_matmul,
+    map_model,
+)
 from repro.core.precision import (  # noqa: F401
     PrecisionAssignment,
     assign_precisions,
@@ -42,20 +46,31 @@ from repro.core.precision import (  # noqa: F401
     sqnr_qy_mpc,
     sqnr_qy_mpc_db,
 )
-from repro.core.compute_models import (  # noqa: F401
-    ISModel,
-    QRModel,
-    QSModel,
-    TechParams,
-    TECH_65NM,
+from repro.core.quant import (  # noqa: F401
+    QuantSpec,
+    SignalStats,
+    UNIFORM_STATS,
+    bit_planes,
+    combine_bit_planes,
+    db,
+    dequantize,
+    fakequant,
+    quantize,
+    sqnr_qiy,
+    sqnr_qiy_db_approx,
+    undb,
 )
-from repro.core.archs import CMArch, IMCArch, QRArch, QSArch  # noqa: F401
-from repro.core.adc import adc_energy  # noqa: F401
-from repro.core.design import DesignPoint, optimize, pareto_sweep  # noqa: F401
-from repro.core.mapping import (  # noqa: F401
-    BankSpec,
-    MatmulShape,
-    ModelReport,
-    map_matmul,
-    map_model,
+from repro.core.snr import compose_snr, compose_snr_db, empirical_snr_db  # noqa: F401
+from repro.core.substrate import (  # noqa: F401
+    AnalyticIMC,
+    BitSerialIMC,
+    Calibration,
+    CalibrationRecorder,
+    DigitalSubstrate,
+    SiteStats,
+    Substrate,
+    as_substrate,
+    calibrate_model,
+    substrate_for_design,
+    substrate_from_flag,
 )

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import math
 
-from repro.core.compute_models import TechParams, TECH_65NM
+from repro.core.compute_models import TECH_65NM, TechParams
 
 K1 = 100e-15  # J
 K2 = 1e-18  # J

@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core import precision as prec
 from repro.core.adc import adc_energy
-from repro.core.compute_models import QRModel, QSModel, TechParams, TECH_65NM
+from repro.core.compute_models import QRModel, QSModel, TECH_65NM, TechParams
 from repro.core.quant import QuantSpec, SignalStats, UNIFORM_STATS
 
 

@@ -24,11 +24,17 @@ from typing import Iterable, Optional
 import numpy as np
 
 from repro.core import precision as prec
-from repro.core.archs import (CMArch, IMCArch, QRArch, QSArch,
-                              binomial_clip_second_moment, sigma_qiy_sq)
-from repro.core.compute_models import TechParams, TECH_65NM
-from repro.core.quant import QuantSpec, SignalStats, UNIFORM_STATS
 from repro.core import snr as snr_lib
+from repro.core.archs import (
+    CMArch,
+    IMCArch,
+    QRArch,
+    QSArch,
+    binomial_clip_second_moment,
+    sigma_qiy_sq,
+)
+from repro.core.compute_models import TECH_65NM, TechParams
+from repro.core.quant import QuantSpec, SignalStats, UNIFORM_STATS
 
 # digital reduction-tree latency per level (banked composition and
 # cross-tile workload rollups share it: one calibration site)
@@ -137,6 +143,33 @@ def evaluate_point(
         snr_a_db=snr_a_db,
         snr_A_db=snr_A_db,
         snr_t_db=snr_t_db,
+        energy_per_dp=energy,
+        delay_per_dp=delay,
+        edp=energy * delay,
+    )
+
+
+def with_b_adc(pt: DesignPoint, b_adc: int,
+               stats: SignalStats = UNIFORM_STATS) -> DesignPoint:
+    """The same analog design point re-assigned a different output-ADC
+    precision (MPC-style per-site assignment, paper eq. 15): SNR_T, ADC
+    energy and conversion delay move; the analog core (kind, knob, banking)
+    stays.  Uses the same Table III closed forms as :func:`evaluate_point`,
+    so ``with_b_adc(pt, pt.b_adc) == pt`` for any solver-produced point."""
+    from repro.core import scaling
+
+    tech = scaling.node(pt.tech)
+    arch = pt.arch(stats)
+    e_bank = arch.energy_per_dp(b_adc)
+    width = b_adc + int(math.ceil(math.log2(max(pt.n_banks, 2))))
+    energy = pt.n_banks * e_bank \
+        + _bank_reduction_energy(pt.n_banks, width, tech)
+    delay = arch.delay_per_dp(b_adc) \
+        + math.ceil(math.log2(max(pt.n_banks, 1)) or 0) * T_REDUCE_LEVEL
+    return dataclasses.replace(
+        pt,
+        b_adc=b_adc,
+        snr_t_db=arch.snr_T_db(b_adc),
         energy_per_dp=energy,
         delay_per_dp=delay,
         edp=energy * delay,

@@ -19,6 +19,12 @@ one of four modes (ExecMode):
 
 The mode and design knobs live in IMCConfig, threaded through model configs.
 Per-layer RNG is derived with jax.random.fold_in over a static layer id.
+
+First-class substrates (repro.core.substrate) wrap an IMCConfig with a
+calibration policy (dynamic per-batch stats vs frozen calibrated ranges) and
+per-site overrides; :func:`linear` accepts either and resolves the effective
+IMCConfig per compute site.  A bare IMCConfig is exactly the dynamic-policy
+substrate - bit-for-bit the historical behaviour.
 """
 from __future__ import annotations
 
@@ -172,12 +178,35 @@ def _dynamic_max(v):
 def linear(
     w: jax.Array,  # (d_in, d_out)
     x: jax.Array,  # (..., d_in)
-    cfg: IMCConfig = DIGITAL,
+    cfg=DIGITAL,  # IMCConfig | core.substrate.Substrate
     rng: Optional[jax.Array] = None,
     bias: Optional[jax.Array] = None,
     dot_general=None,
+    site: Optional[str] = None,
 ) -> jax.Array:
-    """y = x @ w (+ bias) under the configured IMC execution mode."""
+    """y = x @ w (+ bias) on the configured execution substrate.
+
+    ``cfg`` is the substrate the matmul executes on: either a first-class
+    :class:`repro.core.substrate.Substrate` (``DigitalSubstrate`` /
+    ``AnalyticIMC`` / ``BitSerialIMC``) or, for backward compatibility, a
+    bare :class:`IMCConfig` - which behaves exactly like the equivalent
+    dynamic-policy substrate (bit-for-bit: same ops, same per-batch
+    quantizer statistics).
+
+    ``site`` names the compute site this call implements, using the site
+    vocabulary of the ONE shared shapes walk
+    (``core.mapping.per_token_matmul_shapes``: ``"attn.wq"``, ``"mlp.wi"``,
+    ``"lm_head"``, ...).  It selects any per-site substrate override (e.g. a
+    higher B_ADC on the output head) and, under a ``frozen`` calibration
+    policy, the frozen quantizer ranges - which replace the per-batch
+    ``max|x|`` / ``std(y)`` statistics and make the call
+    batch-composition-invariant.  ``site=None`` uses the substrate's base
+    config and the calibration's ``"*"`` fallback entry.
+    """
+    from repro.core import substrate as substrate_lib
+
+    sub = substrate_lib.as_substrate(cfg)
+    cfg = sub.site_config(site)
     if cfg.mode == "digital":
         if dot_general is not None:
             y = dot_general(x, w)
@@ -185,8 +214,26 @@ def linear(
             y = jnp.einsum("...k,km->...m", x, w)
         return y if bias is None else y + bias
 
-    x_max = _dynamic_max(x)
-    w_max = _dynamic_max(w)
+    rec = substrate_lib.active_recorder()
+    if rec is not None:
+        # calibration pass (eager): record this site's operand ranges, then
+        # execute the cheap noiseless fakequant proxy - same ranges as the
+        # real substrate without paying for noise draws / bit-serial planes
+        x_max = _dynamic_max(x)
+        w_max = _dynamic_max(w)
+        xq = _fq_ste(x, cfg.bx, cfg.x_signed, x_max)
+        wq = _fq_ste(w, cfg.bw, True, w_max)
+        y = jnp.einsum("...k,km->...m", xq, wq)
+        rec.observe(site or substrate_lib.DEFAULT_SITE, x, w, y=y)
+        return y if bias is None else y + bias
+
+    stats = sub.site_stats(site)  # None => dynamic per-batch statistics
+    if stats is None:
+        x_max = _dynamic_max(x)
+        w_max = _dynamic_max(w)
+    else:
+        x_max = stats.x_max
+        w_max = stats.w_max
 
     if cfg.mode == "fakequant":
         xq = _fq_ste(x, cfg.bx, cfg.x_signed, x_max)
@@ -199,7 +246,10 @@ def linear(
         xq = _fq_ste(x, cfg.bx, cfg.x_signed, x_max)
         wq = _fq_ste(w, cfg.bw, True, w_max)
         y = jnp.einsum("...k,km->...m", xq, wq)
-        sigma_yo = jax.lax.stop_gradient(jnp.std(y) + 1e-9)
+        if stats is None:
+            sigma_yo = jax.lax.stop_gradient(jnp.std(y) + 1e-9)
+        else:
+            sigma_yo = stats.sigma_yo
         snr_a_db = cfg.resolved_snr_a_db(n)
         sigma_a = sigma_yo * 10.0 ** (-snr_a_db / 20.0)
         if rng is not None:
@@ -214,22 +264,7 @@ def linear(
         from repro.kernels import ops as kops
 
         n = x.shape[-1]
-        arch = cfg.qs_arch(n)
-        mcfg = kops.IMCMatmulConfig(
-            mode="imc_bitserial",
-            bx=cfg.bx,
-            bw=cfg.bw,
-            b_adc=cfg.resolved_b_adc_bitserial(n),
-            rows=cfg.bank_rows(n),
-            x_signed=cfg.x_signed,
-            sigma_d=float(arch.qs.sigma_d),
-            sigma_thermal_counts=float(
-                arch.qs.sigma_theta_volts(arch.n) / arch.qs.dv_unit
-            ),
-            k_h_counts=float(arch.k_h),
-            v_c_counts=float(arch.v_c_counts()),
-            use_kernel=cfg.use_kernel,
-        )
+        mcfg = kops.matmul_config_from_imc(cfg, n)
         lead = x.shape[:-1]
         x2 = x.reshape((-1, x.shape[-1]))
         y = kops.imc_matmul(x2, w, mcfg, key=rng, x_max=x_max, w_max=w_max)

@@ -12,8 +12,8 @@ import dataclasses
 import math
 from typing import Dict, List, Optional
 
+from repro.core.compute_models import TECH_65NM, TechParams
 from repro.core.design import DesignPoint, optimize
-from repro.core.compute_models import TechParams, TECH_65NM
 from repro.core.quant import SignalStats, UNIFORM_STATS
 
 

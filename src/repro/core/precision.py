@@ -18,8 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quant import QuantSpec, SignalStats, db, undb
 from repro.core import snr as snr_lib
+from repro.core.quant import QuantSpec, SignalStats, db, undb
 
 
 # ---------------------------------------------------------------------------

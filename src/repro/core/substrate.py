@@ -1,0 +1,500 @@
+"""First-class execution substrates: WHICH hardware a matmul runs on, HOW its
+quantizers are calibrated, and WHAT design point gets billed for it.
+
+The paper's central prescription is per-compute-site assignment: activation /
+weight / ADC precision must be chosen so SNR_T -> SNR_a at minimal ADC cost
+(MPC, eq. 15) *per site*, not globally.  Before this module the analog
+substrate was selected with a string flag (``IMCConfig.mode``) threaded as a
+kwarg through every layer, quantizer ranges were re-derived from whatever
+batch happened to flow through ``imc_linear.linear``, and the serve-path
+meter had to trust a side-channel shapes walk to know which design point
+"ran" where.  A :class:`Substrate` object now carries all three concerns:
+
+  execution      an :class:`~repro.core.imc_linear.IMCConfig` (the knobs the
+                 kernels actually consume) selected by subclass -
+                 :class:`DigitalSubstrate`, :class:`AnalyticIMC` (folded-noise
+                 model), :class:`BitSerialIMC` (bit-exact QS-Arch kernel);
+  calibration    a policy - ``"dynamic"`` (per-batch quantizer stats, the
+                 historical behaviour, kept bit-exact for training parity) or
+                 ``"frozen"`` (ranges captured once by a calibration pass and
+                 stored in a :class:`Calibration` pytree).  Frozen substrates
+                 make every forward pass batch-composition-invariant: the
+                 batched serve engine is bit-identical to sequential
+                 single-request execution (pinned by
+                 ``tests/test_serve_paged.py``);
+  accounting     an optional ``core.design.DesignPoint`` billed by
+                 ``launch.metering`` for the work this substrate executes,
+                 plus optional per-site overrides.
+
+Per-site overrides are keyed by the site names of THE shared shapes walk
+(``core.mapping.per_token_matmul_shapes``): ``"attn.wq"``, ``"mlp.wi"``,
+``"lm_head"``, ...  An override key matches a site exactly, or by its group
+prefix before the dot (``"attn"`` covers ``attn.wq`` .. ``attn.wo``), or
+``"*"`` as the fallback; this is how MPC-style per-layer precision assignment
+(e.g. the output head at a higher B_ADC than the FFN sites) is expressed.
+
+Calibration semantics (pinned by hypothesis properties in
+``tests/test_properties.py``): per-site stats are running maxima -
+``x_max`` / ``w_max`` are max-|value| over everything observed, ``sigma_yo``
+is the max per-row output std - so frozen ranges are invariant to batch
+order and to zero-row padding, calibrating on a superset of batches never
+shrinks a range, and a :class:`Calibration` round-trips losslessly through
+its pytree and through JSON.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import json
+import threading
+import warnings
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.design import DesignPoint
+from repro.core.imc_linear import IMCConfig
+
+# ---------------------------------------------------------------------------
+# calibration: frozen quantizer statistics, one entry per compute site
+# ---------------------------------------------------------------------------
+
+# stats are max-merged, so every field must be monotone under "observe more":
+# x_max/w_max are running max |value|; sigma_yo is the max per-row output std
+_STAT_FIELDS = ("x_max", "w_max", "sigma_yo")
+
+# merged-over-all-sites fallback entry: sites unseen during calibration (and
+# ``site=None`` callers) freeze against it instead of silently going dynamic,
+# which would break the batch-invariance guarantee for exactly those sites
+DEFAULT_SITE = "*"
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SiteStats:
+    """Frozen quantizer statistics of one matmul site (plain floats: they
+    embed as compile-time constants, which is what makes frozen substrates
+    batch-invariant and keeps the whole Substrate hashable/static)."""
+
+    x_max: float
+    w_max: float
+    sigma_yo: float
+
+    def merge(self, other: "SiteStats") -> "SiteStats":
+        return SiteStats(*(max(getattr(self, f), getattr(other, f))
+                           for f in _STAT_FIELDS))
+
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in _STAT_FIELDS), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Per-site frozen ranges, sorted by site name (a canonical order makes
+    equality/hashing independent of observation order)."""
+
+    sites: Tuple[Tuple[str, SiteStats], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "sites", tuple(sorted(self.sites)))
+
+    def get(self, site: Optional[str]) -> Optional[SiteStats]:
+        """Stats for ``site``, falling back to the ``"*"`` merged entry."""
+        d = dict(self.sites)
+        if site is not None and site in d:
+            return d[site]
+        return d.get(DEFAULT_SITE)
+
+    def site_names(self) -> Tuple[str, ...]:
+        return tuple(name for name, _ in self.sites)
+
+    def merge(self, other: "Calibration") -> "Calibration":
+        d: Dict[str, SiteStats] = dict(self.sites)
+        for name, st in other.sites:
+            d[name] = d[name].merge(st) if name in d else st
+        return Calibration(tuple(d.items()))
+
+    # -- lossless round trips ------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(name for name, _ in self.sites)
+        return tuple(st for _, st in self.sites), names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        return cls(tuple(zip(names, children)))
+
+    def to_dict(self) -> dict:
+        return {name: {f: getattr(st, f) for f in _STAT_FIELDS}
+                for name, st in self.sites}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Mapping[str, float]]) -> "Calibration":
+        return cls(tuple(
+            (name, SiteStats(**{f: float(v[f]) for f in _STAT_FIELDS}))
+            for name, v in d.items()
+        ))
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str) -> "Calibration":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+
+class CalibrationRecorder:
+    """Accumulates per-site running-max stats during an eager calibration
+    pass (activate with :func:`recording`; ``imc_linear.linear`` feeds it)."""
+
+    def __init__(self):
+        self._acc: Dict[str, SiteStats] = {}
+
+    def note(self, site: str, stats: SiteStats):
+        prev = self._acc.get(site)
+        self._acc[site] = stats if prev is None else prev.merge(stats)
+
+    def observe(self, site: str, x, w, y=None):
+        """Record one (x, w) observation of ``site``.  ``y`` defaults to the
+        noiseless quantized-code product the dynamic path would quantize
+        against; zero-padded rows of ``x`` cannot change any stat (max |x|
+        and max per-row std both ignore all-zero rows).
+
+        Works under tracing (scan-over-layers, jit): the concrete values are
+        pulled out through ``jax.debug.callback``, which fires once per
+        runtime execution of the site - layers that scan over one shared
+        site name max-merge into a single entry, which is exactly the
+        per-site (not per-layer-instance) granularity of the shapes walk.
+        """
+        x = jnp.asarray(x)
+        w = jnp.asarray(w)
+        if y is None:
+            y = jnp.einsum("...k,km->...m", x, w)
+        y = jnp.asarray(y)
+        x_max = jnp.max(jnp.abs(x))
+        w_max = jnp.max(jnp.abs(w))
+        sigma = jnp.max(jnp.std(y.reshape(-1, y.shape[-1]), axis=-1))
+        jax.debug.callback(functools.partial(self._note_concrete, site),
+                           x_max, w_max, sigma)
+
+    def _note_concrete(self, site: str, x_max, w_max, sigma):
+        self.note(site, SiteStats(x_max=float(x_max) + 1e-9,
+                                  w_max=float(w_max) + 1e-9,
+                                  sigma_yo=float(sigma) + 1e-9))
+
+    def finalize(self) -> Calibration:
+        """Per-site entries plus the ``"*"`` merge of every site (the frozen
+        fallback for sites the calibration batch never exercised)."""
+        entries = dict(self._acc)
+        if entries and DEFAULT_SITE not in entries:
+            merged = None
+            for st in entries.values():
+                merged = st if merged is None else merged.merge(st)
+            entries[DEFAULT_SITE] = merged
+        return Calibration(tuple(entries.items()))
+
+
+_ACTIVE = threading.local()
+
+
+def active_recorder() -> Optional[CalibrationRecorder]:
+    return getattr(_ACTIVE, "recorder", None)
+
+
+@contextlib.contextmanager
+def recording(recorder: CalibrationRecorder):
+    """Route every non-digital ``imc_linear.linear`` call to ``recorder``.
+    The recording forward must EXECUTE inside the context (the recorder
+    fills through debug callbacks at run time); call ``jax.effects_barrier``
+    before finalizing if you dispatched asynchronously."""
+    prev = active_recorder()
+    _ACTIVE.recorder = recorder
+    try:
+        yield recorder
+    finally:
+        _ACTIVE.recorder = prev
+
+
+# ---------------------------------------------------------------------------
+# per-site overrides
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteOverride:
+    """Per-site deviation from a substrate's base assignment: IMCConfig field
+    replacements (stored as a sorted tuple for hashability) and/or a
+    different billed design point."""
+
+    imc_fields: Tuple[Tuple[str, Any], ...] = ()
+    design: Optional[DesignPoint] = None
+
+
+def _normalize_overrides(overrides) -> Tuple[Tuple[str, SiteOverride], ...]:
+    if overrides is None:
+        return ()
+    if isinstance(overrides, tuple):  # already normalized (dataclasses.replace)
+        return overrides
+    out: List[Tuple[str, SiteOverride]] = []
+    for key, val in overrides.items():
+        if isinstance(val, SiteOverride):
+            out.append((key, val))
+            continue
+        if isinstance(val, DesignPoint):
+            out.append((key, SiteOverride(design=val)))
+            continue
+        fields = dict(val)
+        design = fields.pop("design", None)
+        out.append((key, SiteOverride(tuple(sorted(fields.items())), design)))
+    return tuple(sorted(out))
+
+
+# ---------------------------------------------------------------------------
+# the substrate hierarchy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Substrate:
+    """One fully-specified way to execute (and bill) the model's matmuls.
+
+    Hashable and immutable: a Substrate is safe to close over in jitted
+    functions and to use as a cache key.  Prefer the concrete subclasses
+    (:class:`DigitalSubstrate`, :class:`AnalyticIMC`, :class:`BitSerialIMC`);
+    the base class exists for exotic ``IMCConfig`` modes (e.g. fakequant).
+    """
+
+    imc: IMCConfig = IMCConfig()
+    policy: str = "dynamic"  # "dynamic" | "frozen"
+    calibration: Optional[Calibration] = None
+    design: Optional[DesignPoint] = None
+    overrides: Tuple[Tuple[str, SiteOverride], ...] = ()
+
+    def __post_init__(self):
+        if self.policy not in ("dynamic", "frozen"):
+            raise ValueError(f"unknown calibration policy {self.policy!r}")
+        if self.policy == "frozen" and self.calibration is None:
+            raise ValueError("a frozen substrate needs a Calibration "
+                             "(run substrate.calibrate(...) first)")
+        object.__setattr__(self, "overrides",
+                           _normalize_overrides(self.overrides))
+
+    # -- identity ------------------------------------------------------------
+    @property
+    def name(self) -> str:
+        """The execution-mode name (the string the old flag plumbing used)."""
+        return self.imc.mode
+
+    # -- per-site resolution -------------------------------------------------
+    def _override_for(self, site: Optional[str]) -> Optional[SiteOverride]:
+        if not self.overrides:
+            return None
+        d = dict(self.overrides)
+        if site is not None:
+            if site in d:
+                return d[site]
+            group = site.split(".", 1)[0]
+            if group in d:
+                return d[group]
+        return d.get(DEFAULT_SITE)
+
+    def site_config(self, site: Optional[str] = None) -> IMCConfig:
+        """The effective execution knobs at ``site`` (base IMCConfig with any
+        matching override fields applied)."""
+        ov = self._override_for(site)
+        if ov is None or not ov.imc_fields:
+            return self.imc
+        return dataclasses.replace(self.imc, **dict(ov.imc_fields))
+
+    def site_stats(self, site: Optional[str] = None) -> Optional[SiteStats]:
+        """Frozen quantizer stats for ``site`` (None under the dynamic
+        policy: the caller derives per-batch stats as before)."""
+        if self.policy != "frozen":
+            return None
+        stats = self.calibration.get(site)
+        if stats is None:
+            raise KeyError(
+                f"frozen substrate has no calibration entry for site "
+                f"{site!r} and no {DEFAULT_SITE!r} fallback")
+        return stats
+
+    def design_for_site(self, site: Optional[str] = None) -> Optional[DesignPoint]:
+        """The design point billed for work at ``site`` (site override wins
+        over the substrate-wide design point)."""
+        ov = self._override_for(site)
+        if ov is not None and ov.design is not None:
+            return ov.design
+        return self.design
+
+    # -- functional updates --------------------------------------------------
+    def frozen(self, calibration: Calibration) -> "Substrate":
+        """This substrate with quantizer ranges frozen at ``calibration``."""
+        return dataclasses.replace(self, policy="frozen",
+                                   calibration=calibration)
+
+    def dynamic(self) -> "Substrate":
+        return dataclasses.replace(self, policy="dynamic", calibration=None)
+
+    def with_design(self, design: DesignPoint) -> "Substrate":
+        return dataclasses.replace(self, design=design)
+
+    def with_overrides(self, overrides) -> "Substrate":
+        return dataclasses.replace(self,
+                                   overrides=_normalize_overrides(overrides))
+
+    # -- calibration pass ----------------------------------------------------
+    def calibrate(self, fn, batches: Iterable[Any]) -> "Substrate":
+        """Run ``fn(batch)`` eagerly for each reference batch under a
+        recorder and return the frozen substrate.  ``fn`` must execute the
+        workload through ``imc_linear.linear`` with THIS substrate in
+        dynamic mode (e.g. a closure over ``models.forward``)."""
+        rec = CalibrationRecorder()
+        with recording(rec):
+            for batch in batches:
+                fn(batch)
+            jax.effects_barrier()  # flush pending recorder callbacks
+        return self.frozen(rec.finalize())
+
+
+class _ModalSubstrate(Substrate):
+    """Shared constructor for the concrete substrates: accepts either a
+    ready-made ``imc=IMCConfig`` (mode must match) or IMCConfig knobs as
+    keywords (``bx=7, bw=7, v_wl=0.7, ...``)."""
+
+    MODE = ""
+
+    def __init__(self, *, imc: Optional[IMCConfig] = None,
+                 policy: str = "dynamic",
+                 calibration: Optional[Calibration] = None,
+                 design: Optional[DesignPoint] = None,
+                 overrides=(), **knobs):
+        if imc is None:
+            imc = IMCConfig(mode=self.MODE, **knobs)
+        else:
+            if knobs:
+                imc = dataclasses.replace(imc, **knobs)
+            if imc.mode != self.MODE:
+                raise ValueError(
+                    f"{type(self).__name__} wants mode {self.MODE!r}, "
+                    f"got {imc.mode!r}")
+        super().__init__(imc=imc, policy=policy, calibration=calibration,
+                         design=design, overrides=overrides)
+
+
+class DigitalSubstrate(_ModalSubstrate):
+    """Plain matmuls - the baseline every IMC substrate is compared against.
+    Carries no analog design point by default; attach one with
+    ``with_design`` to bill a hypothetical deployment."""
+
+    MODE = "digital"
+
+
+class AnalyticIMC(_ModalSubstrate):
+    """Folded-noise IMC model (paper eqs. 10-15): fakequant + Gaussian analog
+    noise at the analytic SNR_a + MPC-clipped B_ADC output quantization.
+    Differentiable, cheap, shardable - the training / dry-run substrate."""
+
+    MODE = "imc_analytic"
+
+
+class BitSerialIMC(_ModalSubstrate):
+    """Bit-exact QS-Arch simulation through the Pallas kernel path
+    (``repro.kernels``) - the silicon-fidelity substrate."""
+
+    MODE = "imc_bitserial"
+
+
+DIGITAL_SUBSTRATE = DigitalSubstrate()
+
+_BY_MODE = {
+    DigitalSubstrate.MODE: DigitalSubstrate,
+    AnalyticIMC.MODE: AnalyticIMC,
+    BitSerialIMC.MODE: BitSerialIMC,
+}
+
+
+def as_substrate(obj: Union[None, "Substrate", IMCConfig]) -> Substrate:
+    """Normalize legacy execution configs to a Substrate.
+
+    ``IMCConfig`` stays a supported low-level knob container (it IS part of
+    every substrate), so wrapping one is silent and exactly reproduces the
+    historical dynamic-calibration behaviour bit for bit.
+    """
+    if obj is None:
+        return DIGITAL_SUBSTRATE
+    if isinstance(obj, Substrate):
+        return obj
+    if isinstance(obj, IMCConfig):
+        cls = _BY_MODE.get(obj.mode)
+        if cls is None:
+            return Substrate(imc=obj)
+        return cls(imc=obj)
+    raise TypeError(f"cannot interpret {type(obj).__name__} as a Substrate")
+
+
+def substrate_from_flag(mode: str, **knobs) -> Substrate:
+    """DEPRECATED shim for the old string-flag plumbing.
+
+    Emits a :class:`DeprecationWarning`; construct :class:`DigitalSubstrate`
+    / :class:`AnalyticIMC` / :class:`BitSerialIMC` directly instead.
+    """
+    warnings.warn(
+        "substrate_from_flag() is a deprecation shim for the old string-flag "
+        "API; construct DigitalSubstrate / AnalyticIMC / BitSerialIMC "
+        "directly",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    cls = _BY_MODE.get(mode)
+    if cls is None:
+        return Substrate(imc=IMCConfig(mode=mode, **knobs))
+    return cls(**knobs)
+
+
+def substrate_for_design(pt: DesignPoint, **kw) -> Substrate:
+    """The executable substrate a ``core.design`` design point implies: QS
+    architectures run bit-serial planes (:class:`BitSerialIMC`); QR/CM
+    convert a full DP per ADC read, which the folded-noise
+    :class:`AnalyticIMC` models.  The design point rides along for billing
+    (``launch.metering``)."""
+    if pt.arch_kind == "qs":
+        return BitSerialIMC(bx=pt.bx, bw=pt.bw, b_adc=pt.b_adc,
+                            rows=pt.n_bank, v_wl=pt.knob, design=pt, **kw)
+    return AnalyticIMC(bx=pt.bx, bw=pt.bw, b_adc=pt.b_adc,
+                       snr_a_db=pt.snr_a_db, design=pt, **kw)
+
+
+# ---------------------------------------------------------------------------
+# model-level calibration convenience
+# ---------------------------------------------------------------------------
+
+
+def calibrate_model(cfg, params, token_batches, prefix_embeds=None):
+    """Freeze ``cfg``'s substrate against reference ``token_batches``.
+
+    Runs ``models.forward`` eagerly (the recorder needs concrete values) once
+    per ``(B, S)`` int32 batch; during recording every non-digital site
+    executes the noiseless fakequant proxy, which is cheap and has the same
+    operand ranges as the real substrate.  Returns ``cfg`` with the frozen
+    substrate installed (``cfg.imc`` becomes batch-composition-invariant).
+    """
+    from repro.models import forward  # local: core must not import models
+
+    sub = as_substrate(cfg.imc).dynamic()
+    run_cfg = cfg.replace(imc=sub)
+
+    def one(batch):
+        forward(params, run_cfg, jnp.asarray(batch, jnp.int32),
+                prefix_embeds=prefix_embeds)
+
+    frozen = sub.calibrate(one, token_batches)
+    return cfg.replace(imc=frozen)

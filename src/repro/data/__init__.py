@@ -1,2 +1,9 @@
 """Deterministic sharded data pipeline."""
-from repro.data.pipeline import DataConfig, MemmapCorpus, Prefetcher, SyntheticLM, host_slice, make_source  # noqa: F401
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig,
+    MemmapCorpus,
+    Prefetcher,
+    SyntheticLM,
+    host_slice,
+    make_source,
+)

@@ -65,6 +65,30 @@ def derive_config_from_arch(arch, x_signed: bool = True, use_kernel: bool = True
     )
 
 
+def matmul_config_from_imc(cfg, n: int) -> IMCMatmulConfig:
+    """Resolve the layer-level execution knobs (an
+    ``repro.core.imc_linear.IMCConfig``, i.e. one site of a
+    ``core.substrate.Substrate``) into the kernel-level
+    :class:`IMCMatmulConfig` for a DP dimension ``n``: auto-banked rows,
+    per-plane ADC precision, and the QS-Arch noise constants in counts."""
+    arch = cfg.qs_arch(n)
+    return IMCMatmulConfig(
+        mode="imc_bitserial",
+        bx=cfg.bx,
+        bw=cfg.bw,
+        b_adc=cfg.resolved_b_adc_bitserial(n),
+        rows=cfg.bank_rows(n),
+        x_signed=cfg.x_signed,
+        sigma_d=float(arch.qs.sigma_d),
+        sigma_thermal_counts=float(
+            arch.qs.sigma_theta_volts(arch.n) / arch.qs.dv_unit
+        ),
+        k_h_counts=float(arch.k_h),
+        v_c_counts=float(arch.v_c_counts()),
+        use_kernel=cfg.use_kernel,
+    )
+
+
 def _quantize_operands(x, w, cfg: IMCMatmulConfig, x_max=None, w_max=None):
     if x_max is None:
         x_max = jax.lax.stop_gradient(jnp.max(jnp.abs(x)) + 1e-9)
@@ -89,10 +113,23 @@ def imc_matmul(
     key: Optional[jax.Array] = None,
     x_max: Optional[jax.Array] = None,
     w_max: Optional[jax.Array] = None,
+    sigma_yo: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """IMC-simulated y = x @ w in real units.
+    """IMC-simulated ``y = x @ w`` in real units.
 
-    ``key=None`` disables analog noise (quantization/clipping/ADC still apply).
+    The quantizer/clip operands make the call batch-composition-invariant
+    when supplied (the ``frozen`` calibration policy of
+    ``core.substrate.Substrate``) and reproduce the historical per-batch
+    behaviour when left ``None``:
+
+      ``x_max`` / ``w_max``  operand quantizer ranges; default: dynamic
+                             ``max|.|`` over the full operand;
+      ``sigma_yo``           (analytic mode) output std in CODE units that
+                             scales the folded analog noise and the MPC clip;
+                             default: the std of the first <= 8 rows' ideal
+                             code product - a per-batch statistic;
+      ``key=None``           disables analog noise (quantization, clipping
+                             and the output ADC still apply).
     """
     b_sz, k = x.shape
     _, m = w.shape
@@ -102,9 +139,12 @@ def imc_matmul(
         return jnp.dot(xc, wc, preferred_element_type=jnp.float32) * (dx * dw)
 
     if cfg.mode == "imc_analytic":
-        sigma_yo_codes = jax.lax.stop_gradient(
-            jnp.std(jnp.dot(xc[: min(b_sz, 8)], wc)) + 1e-9
-        )
+        if sigma_yo is None:
+            sigma_yo_codes = jax.lax.stop_gradient(
+                jnp.std(jnp.dot(xc[: min(b_sz, 8)], wc)) + 1e-9
+            )
+        else:
+            sigma_yo_codes = sigma_yo
         # folded analog noise: SNR_a = sigma_yo^2 / sigma_a^2
         if cfg.snr_a_db is not None:
             sigma_out = float(10.0 ** (-cfg.snr_a_db / 20.0))

@@ -19,7 +19,7 @@ import jax
 from repro import configs
 from repro.configs.shapes import SHAPES, input_specs
 from repro.launch import steps as steps_lib
-from repro.launch.hlo_analysis import HloModule, _shape_list, _bytes_of
+from repro.launch.hlo_analysis import HloModule, _bytes_of, _shape_list
 from repro.launch.mesh import make_production_mesh
 from repro.models import init_cache, init_params
 
@@ -81,20 +81,24 @@ def report(hlo_text: str, top: int = 12):
 
 def forward_energy(cfg, design, tokens: float = 1, sites=None) -> dict:
     """IMC energy/delay rollup of ``tokens`` token-forwards of ``cfg`` at a
-    ``core.design`` design point - the training/profiling-side view of the
-    same accounting the serve meter reports.
+    ``core.design`` design point OR a ``core.substrate.Substrate`` carrying
+    one (per-site design overrides are honoured) - the training/profiling-
+    side view of the same accounting the serve meter reports.
 
-    Deliberately a thin veneer over ``launch.metering.energy_for_tokens``
+    Deliberately a thin veneer over the ``launch.metering`` rollup helpers
     with the shared ``core.mapping.per_token_matmul_shapes`` walk: a second
     independent shapes walk here would silently double-count (or drop)
     matmul sites relative to the serve-side rollup.  Pinned equal to the
     meter on a single full forward by ``tests/test_metering.py``.
     """
     from repro.core.mapping import per_token_matmul_shapes
-    from repro.launch.metering import energy_for_tokens
+    from repro.core.substrate import Substrate
+    from repro.launch.metering import energy_for_tokens, substrate_energy_for_tokens
 
     if sites is None:
         sites = per_token_matmul_shapes(cfg)
+    if isinstance(design, Substrate):
+        return substrate_energy_for_tokens(sites, design, tokens)
     return energy_for_tokens(sites, design, tokens)
 
 

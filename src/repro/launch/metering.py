@@ -32,6 +32,13 @@ The per-site shapes walk is shared with ``benchmarks/model_energy`` and
 per-token energy/delay math is shared with ``core.design.workload_metrics``
 - one code path, so serve-side and training-side accounting cannot silently
 double-count a site.
+
+Billing is substrate-first: the engine records the
+``core.substrate.Substrate`` it executes on the meter, and
+:func:`serve_energy_report` accepts a substrate whose (possibly per-site)
+design points price each matmul site - the design point billed is the one
+the substrate object actually carries, not a parallel flag.  The legacy
+``design=`` argument remains as the uniform-design special case.
 """
 from __future__ import annotations
 
@@ -42,6 +49,7 @@ from typing import Dict, List, Optional, Sequence
 from repro.core import design as design_lib
 from repro.core.design import DesignPoint
 from repro.core.mapping import MatmulShape, per_token_matmul_shapes
+from repro.core.substrate import Substrate
 
 
 class DPMeter:
@@ -53,12 +61,17 @@ class DPMeter:
     are O(1) host-side integer updates.
     """
 
-    def __init__(self, cfg=None, sites: Optional[Sequence[MatmulShape]] = None):
+    def __init__(self, cfg=None, sites: Optional[Sequence[MatmulShape]] = None,
+                 substrate: Optional[Substrate] = None):
         if sites is None:
             if cfg is None:
                 raise ValueError("need a model config or an explicit site list")
             sites = per_token_matmul_shapes(cfg)
         self.sites: List[MatmulShape] = list(sites)
+        # the substrate whose matmuls this meter counted: the serve engine
+        # stamps its own substrate here at construction, so the rollup knows
+        # what actually ran without any parallel flag plumbing
+        self.substrate: Optional[Substrate] = substrate
         # prefill: billed = admitted rows x bucket (pad rows excluded)
         self.prefill_billed_tokens = 0
         self.prefill_true_tokens = 0
@@ -141,6 +154,33 @@ def energy_for_tokens(sites, design: DesignPoint, tokens: float) -> dict:
     }
 
 
+def substrate_energy_for_tokens(sites: Sequence[MatmulShape],
+                                substrate: Substrate, tokens: float) -> dict:
+    """Like :func:`energy_for_tokens`, but each site is billed at the design
+    point the SUBSTRATE assigns to it (``Substrate.design_for_site``), so
+    MPC-style per-site overrides - e.g. the output head at a higher B_ADC -
+    price exactly the hardware they describe.  With no per-site overrides
+    this reduces to ``energy_for_tokens(sites, substrate.design, tokens)``
+    exactly (same additions in the same site order)."""
+    energy = 0.0
+    delay = 0.0
+    for s in sites:
+        pt = substrate.design_for_site(s.name)
+        if pt is None:
+            raise ValueError(
+                f"substrate {substrate.name!r} carries no design point for "
+                f"site {s.name!r}; attach one with with_design()/overrides")
+        per_tok = design_lib.workload_metrics(pt, [(s.k, s.m, s.calls)])
+        energy += per_tok["energy_per_token_j"]
+        delay += per_tok["delay_per_token_s"]
+    return {
+        "energy_j": tokens * energy,
+        "energy_per_token_j": energy,
+        "delay_per_token_s": delay,
+        "edp_per_token": energy * delay,
+    }
+
+
 @dataclasses.dataclass(frozen=True)
 class EnergyReport:
     """A served workload rolled up at one design point.
@@ -161,6 +201,9 @@ class EnergyReport:
     prefill_j: float
     decode_j: float
     delay_per_token_s: float
+    # the substrate whose (per-site) design points priced this workload;
+    # None for legacy uniform-design rollups
+    substrate: Optional[Substrate] = None
 
     @property
     def total_j(self) -> float:
@@ -184,6 +227,8 @@ class EnergyReport:
 
     def summary(self) -> Dict[str, float]:
         return {
+            "substrate": (self.substrate.name if self.substrate is not None
+                          else None),
             "arch_kind": self.design.arch_kind,
             "n": self.design.n,
             "n_banks": self.design.n_banks,
@@ -206,15 +251,37 @@ class EnergyReport:
 
 def serve_energy_report(
     meter: DPMeter,
-    design: DesignPoint,
+    design: Optional[DesignPoint] = None,
     generated_tokens: Optional[int] = None,
     requests: Optional[int] = None,
+    substrate: Optional[Substrate] = None,
 ) -> EnergyReport:
     """Roll a metered serve workload up to J/token, J/request, EDP/token and
-    compute-model tok/s at ``design`` (prefill/decode split preserved)."""
+    compute-model tok/s (prefill/decode split preserved).
+
+    Pass a ``substrate`` to bill the design points the substrate object
+    carries - its base ``design`` plus any per-site overrides (the
+    first-class path: no flag plumbing between the engine and the bill).
+    Passing a bare ``design`` is the legacy uniform-design rollup.
+    """
     sites = meter.sites
-    pre = energy_for_tokens(sites, design, meter.prefill_billed_tokens)
-    dec = energy_for_tokens(sites, design, meter.decode_billed_tokens)
+    if substrate is not None:
+        if design is not None:
+            raise ValueError("pass either design= or substrate=, not both")
+        design = substrate.design
+        if design is None:
+            raise ValueError(
+                f"substrate {substrate.name!r} carries no design point to "
+                "bill; attach one with with_design()")
+        pre = substrate_energy_for_tokens(sites, substrate,
+                                          meter.prefill_billed_tokens)
+        dec = substrate_energy_for_tokens(sites, substrate,
+                                          meter.decode_billed_tokens)
+    elif design is None:
+        raise ValueError("need a design point or a substrate to bill")
+    else:
+        pre = energy_for_tokens(sites, design, meter.prefill_billed_tokens)
+        dec = energy_for_tokens(sites, design, meter.decode_billed_tokens)
     if generated_tokens is None:
         # best available proxy: every billed decode token is delivered, plus
         # one first token per prefill row
@@ -230,6 +297,7 @@ def serve_energy_report(
         prefill_j=pre["energy_j"],
         decode_j=dec["energy_j"],
         delay_per_token_s=dec["delay_per_token_s"],
+        substrate=substrate,
     )
 
 

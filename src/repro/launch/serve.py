@@ -1,6 +1,11 @@
 """Device-resident continuous-batching serve engine with a PAGED KV cache:
 batched bucketed prefill + fused decode, optionally executing every matmul
 through the IMC simulation (the paper's technique in deployment position).
+The execution substrate is a first-class ``repro.core.substrate.Substrate``
+(``cfg.imc``); with a ``frozen`` calibration policy the IMC quantizer ranges
+are compile-time constants, so batched engine output is bit-identical to
+sequential single-request execution on every substrate (``--imc-policy
+frozen``).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
       --batch 4 --prompt-len 32 --gen 16 --imc-mode imc_analytic
@@ -66,7 +71,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.models import (decode_step, init_paged_cache, init_params, prefill)
+from repro.core import substrate as substrate_lib
+from repro.models import decode_step, init_paged_cache, init_params, prefill
 
 log = logging.getLogger("repro.serve")
 
@@ -169,11 +175,19 @@ class Engine:
                  kv_blocks: Optional[int] = None, meter=None):
         self.cfg = cfg
         self.params = params
+        # the first-class execution substrate every matmul routes through
+        # (cfg.imc may be a bare IMCConfig - normalized here once)
+        self.substrate = substrate_lib.as_substrate(cfg.imc)
         # optional launch.metering.DPMeter: billed-work accounting.  Both
         # hook points are O(1) host-side counter updates driven by values
         # the engine already holds, so the device contracts (fused scan,
-        # one (slots, T) transfer per chunk) are untouched.
+        # one (slots, T) transfer per chunk) are untouched.  The meter is
+        # stamped with the substrate that actually runs, so the energy
+        # rollup bills the design points the substrate objects carry - no
+        # side-channel flag plumbing.
         self.meter = meter
+        if meter is not None and getattr(meter, "substrate", None) is None:
+            meter.substrate = self.substrate
         self.batch_slots = batch_slots
         self.block = block_size
         self.max_blocks = -(-cache_len // block_size)
@@ -588,6 +602,13 @@ def main(argv=None):
                     choices=[None, "fakequant", "imc_analytic",
                              "imc_bitserial"])
     ap.add_argument("--imc-vwl", type=float, default=0.7)
+    ap.add_argument("--imc-policy", default="dynamic",
+                    choices=["dynamic", "frozen"],
+                    help="substrate calibration policy: 'frozen' calibrates "
+                         "quantizer ranges on a synthetic reference batch "
+                         "before serving and disables the shared analog-"
+                         "noise RNG, making IMC outputs batch-composition-"
+                         "invariant (batched == sequential, bit-identical)")
     ap.add_argument("--energy-report", action="store_true",
                     help="meter the served traffic and print J/token, "
                          "J/request and EDP/token at the min-energy QS/QR/CM "
@@ -604,8 +625,9 @@ def main(argv=None):
     if args.imc_mode:
         from repro.core.imc_linear import IMCConfig
 
-        cfg = cfg.replace(imc=IMCConfig(mode=args.imc_mode, bx=7, bw=7,
-                                        v_wl=args.imc_vwl))
+        sub = substrate_lib.as_substrate(
+            IMCConfig(mode=args.imc_mode, bx=7, bw=7, v_wl=args.imc_vwl))
+        cfg = cfg.replace(imc=sub)
         rng = jax.random.PRNGKey(7)
 
     if args.prompt_lens:
@@ -613,6 +635,20 @@ def main(argv=None):
     else:
         lens = [args.prompt_len]
     params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.imc_mode and args.imc_policy == "frozen":
+        # freeze quantizer ranges on a synthetic reference batch: served
+        # outputs become independent of how requests are batched together.
+        # The engine-wide noise RNG must also go: its draws are shaped by
+        # the batch (slots x step), so leaving it on would break the
+        # batched == sequential bit-identity the frozen policy advertises.
+        rng = None
+        ref = np.random.default_rng(1).integers(
+            0, cfg.vocab_size, (2, max(lens) if lens else 32))
+        cfg = substrate_lib.calibrate_model(cfg, params, [ref])
+        log.info("froze substrate calibration on a %s reference batch "
+                 "(%d sites); analog-noise RNG disabled for "
+                 "batch-invariance", ref.shape,
+                 len(cfg.imc.calibration.site_names()))
     bucketable = not needs_exact_prefill(cfg)
     max_bucket = max(prefill_bucket(l, bucketable, 10**9) for l in lens)
     cache_len = max_bucket + args.gen + 8
@@ -657,9 +693,11 @@ def main(argv=None):
                 pt = optimize(n=512, snr_t_target_db=snr_db, kinds=(kind,))
                 if pt is None:
                     continue
+                # bill through the substrate the design point implies: the
+                # rollup reads its design from the substrate object itself
                 reports.append(serve_energy_report(
-                    meter, pt, generated_tokens=total_tokens,
-                    requests=len(finished)))
+                    meter, substrate=substrate_lib.substrate_for_design(pt),
+                    generated_tokens=total_tokens, requests=len(finished)))
         print(f"serve-path energy (billed prefill tokens="
               f"{meter.prefill_billed_tokens} of which padding="
               f"{meter.prefill_pad_tokens}, decode tokens="

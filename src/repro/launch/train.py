@@ -51,8 +51,12 @@ def main(argv=None):
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     if args.imc_mode:
         from repro.core.imc_linear import IMCConfig
+        from repro.core.substrate import as_substrate
 
-        cfg = cfg.replace(imc=IMCConfig(mode=args.imc_mode, bx=7, bw=7))
+        # dynamic-policy substrate: per-batch quantizer stats keep STE
+        # gradients tracking the live activation ranges (training parity)
+        cfg = cfg.replace(
+            imc=as_substrate(IMCConfig(mode=args.imc_mode, bx=7, bw=7)))
 
     mesh = make_host_mesh()
     shape = ShapeSpec("cli", args.seq, args.batch, "train")

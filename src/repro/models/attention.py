@@ -18,8 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.imc_linear import DIGITAL, IMCConfig, linear
-from repro.launch.sharding import (attn_carry_pin, attn_expand_groups,
-                                   attn_grad_spec, ws, ws_attn)
+from repro.launch.sharding import attn_carry_pin, attn_expand_groups, attn_grad_spec, ws, ws_attn
 from repro.models.layers import dense_init, rope, softcap
 
 NEG_INF = -1e30
@@ -48,11 +47,18 @@ class AttnDims(NamedTuple):
     use_rope: bool
 
 
-def _project_qkv(params, x, dims: AttnDims, positions, imc, rng):
+def _project_qkv(params, x, dims: AttnDims, positions, imc, rng,
+                 site_prefix: str = "attn"):
     b, s, _ = x.shape
-    q = linear(params["wq"], x, imc, rng).reshape(b, s, dims.n_heads, dims.head_dim)
-    k = linear(params["wk"], x, imc, rng).reshape(b, s, dims.n_kv, dims.head_dim)
-    v = linear(params["wv"], x, imc, rng).reshape(b, s, dims.n_kv, dims.head_dim)
+    q = linear(params["wq"], x, imc, rng,
+               site=f"{site_prefix}.wq").reshape(b, s, dims.n_heads,
+                                                 dims.head_dim)
+    k = linear(params["wk"], x, imc, rng,
+               site=f"{site_prefix}.wk").reshape(b, s, dims.n_kv,
+                                                 dims.head_dim)
+    v = linear(params["wv"], x, imc, rng,
+               site=f"{site_prefix}.wv").reshape(b, s, dims.n_kv,
+                                                 dims.head_dim)
     if dims.use_rope:
         q = rope(q, positions, dims.rope_theta)
         k = rope(k, positions, dims.rope_theta)
@@ -320,8 +326,9 @@ def attention_forward(
     positions,  # (B, S) absolute positions
     imc: IMCConfig = DIGITAL,
     rng=None,
+    site_prefix: str = "attn",
 ):
-    q, k, v = _project_qkv(params, x, dims, positions, imc, rng)
+    q, k, v = _project_qkv(params, x, dims, positions, imc, rng, site_prefix)
     if dims.window is not None and dims.window < x.shape[1]:
         ctx = banded_attention(q, k, v, dims)
     else:
@@ -329,7 +336,7 @@ def attention_forward(
         ctx = flash_attention(q, k, v, d_nowin if dims.window is None else dims)
     b, s = x.shape[:2]
     ctx = ctx.reshape(b, s, dims.n_heads * dims.head_dim)
-    return linear(params["wo"], ctx, imc, rng)
+    return linear(params["wo"], ctx, imc, rng, site=f"{site_prefix}.wo")
 
 
 # ---------------------------------------------------------------------------
@@ -360,7 +367,8 @@ def init_paged_kv_cache(batch: int, num_blocks: int, block_size: int,
     }
 
 
-def _decode_attend(params, x, q, k, v, valid, dims: AttnDims, imc, rng):
+def _decode_attend(params, x, q, k, v, valid, dims: AttnDims, imc, rng,
+                   site_prefix: str = "attn"):
     """Single-token attention over a (B, Skv, Hkv, hd) K/V view with a
     (B, Skv) validity mask; shared by the contiguous and paged cache paths."""
     b = x.shape[0]
@@ -377,11 +385,11 @@ def _decode_attend(params, x, q, k, v, valid, dims: AttnDims, imc, rng):
     p = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
     ctx = ctx.reshape(b, 1, hq * hd).astype(x.dtype)
-    return linear(params["wo"], ctx, imc, rng)
+    return linear(params["wo"], ctx, imc, rng, site=f"{site_prefix}.wo")
 
 
 def _attention_decode_paged(params, x, cache, pos_b, dims: AttnDims, imc, rng,
-                            active):
+                            active, site_prefix: str = "attn"):
     """Paged decode: scatter the new K/V into the tail block, gather the
     slot's K/V view through the block table.
 
@@ -394,7 +402,8 @@ def _attention_decode_paged(params, x, cache, pos_b, dims: AttnDims, imc, rng,
     assert dims.window is None, "paged KV caches are global-attention only"
     b = x.shape[0]
     positions = pos_b[:, None]
-    q, k_new, v_new = _project_qkv(params, x, dims, positions, imc, rng)
+    q, k_new, v_new = _project_qkv(params, x, dims, positions, imc, rng,
+                                   site_prefix)
     pk, pv, bt = cache["pk"], cache["pv"], cache["bt"]
     block = pk.shape[1]
     max_blocks = bt.shape[1]
@@ -409,7 +418,7 @@ def _attention_decode_paged(params, x, cache, pos_b, dims: AttnDims, imc, rng,
     k = ws(pk[bt].reshape(b, s_kv, dims.n_kv, dims.head_dim), "kv_bshd")
     v = ws(pv[bt].reshape(b, s_kv, dims.n_kv, dims.head_dim), "kv_bshd")
     valid = jnp.arange(s_kv)[None, :] <= pos_b[:, None]
-    y = _decode_attend(params, x, q, k, v, valid, dims, imc, rng)
+    y = _decode_attend(params, x, q, k, v, valid, dims, imc, rng, site_prefix)
     return y, {"pk": pk, "pv": pv, "bt": bt}
 
 
@@ -423,6 +432,7 @@ def attention_decode(
     imc: IMCConfig = DIGITAL,
     rng=None,
     active=None,  # optional (B,) bool: rows allowed to write their K/V slot
+    site_prefix: str = "attn",
 ):
     b = x.shape[0]
     # per-slot positions: a scalar broadcasts to the whole batch (wave-style
@@ -431,9 +441,10 @@ def attention_decode(
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     if "pk" in cache:
         return _attention_decode_paged(params, x, cache, pos_b, dims, imc,
-                                       rng, active)
+                                       rng, active, site_prefix)
     positions = pos_b[:, None]
-    q, k_new, v_new = _project_qkv(params, x, dims, positions, imc, rng)
+    q, k_new, v_new = _project_qkv(params, x, dims, positions, imc, rng,
+                                   site_prefix)
     s_kv = cache["k"].shape[1]
     # ring buffer for sliding windows; plain append for global attention
     if dims.window is not None:
@@ -454,5 +465,5 @@ def attention_decode(
         )
     else:
         valid = idx[None, :] <= pos_b[:, None]
-    y = _decode_attend(params, x, q, k, v, valid, dims, imc, rng)
+    y = _decode_attend(params, x, q, k, v, valid, dims, imc, rng, site_prefix)
     return y, {"k": k, "v": v}

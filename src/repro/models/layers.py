@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.imc_linear import IMCConfig, DIGITAL, linear
+from repro.core.imc_linear import DIGITAL, IMCConfig, linear
 from repro.launch.sharding import ws
 
 
@@ -124,14 +124,16 @@ def init_mlp(key, d: int, d_ff: int, kind: str, dtype):
 
 
 def apply_mlp(params, x, kind: str, imc: IMCConfig = DIGITAL, rng=None):
+    # site names follow core.mapping.per_token_matmul_shapes (the gate proj
+    # shares the "mlp.wi" site: same shape, same design-point assignment)
     if kind in ("swiglu", "geglu"):
-        h = linear(params["wi"], x, imc, rng)
-        g = linear(params["wg"], x, imc, rng)
+        h = linear(params["wi"], x, imc, rng, site="mlp.wi")
+        g = linear(params["wg"], x, imc, rng, site="mlp.wi")
         act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
         h = act(g.astype(jnp.float32)).astype(h.dtype) * h
         h = ws(h, "act_btf")
-        return linear(params["wo"], h, imc, rng)
-    h = linear(params["wi"], x, imc, rng)
+        return linear(params["wo"], h, imc, rng, site="mlp.wo")
+    h = linear(params["wi"], x, imc, rng, site="mlp.wi")
     h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
     h = ws(h, "act_btf")
-    return linear(params["wo"], h, imc, rng)
+    return linear(params["wo"], h, imc, rng, site="mlp.wo")

@@ -133,7 +133,7 @@ def _head(params, cfg: ArchConfig, x):
     if cfg.tie_embeddings:
         logits = jnp.einsum("...d,vd->...v", x, params["embed"])
     else:
-        logits = linear(params["lm_head"], x, cfg.imc)
+        logits = linear(params["lm_head"], x, cfg.imc, site="lm_head")
     logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
     if cfg.padded_vocab != cfg.vocab_size:
         # mask padding rows out of the softmax

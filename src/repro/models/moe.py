@@ -44,14 +44,14 @@ def init_moe(key, d: int, d_ff: int, n_experts: int, mlp_kind: str, dtype):
 
 def _expert_mlp(ep, h, mlp_kind: str, imc: IMCConfig, rng):
     """h: (C, d) for a single expert's param slice ep."""
-    hi = linear(ep["wi"], h, imc, rng)
+    hi = linear(ep["wi"], h, imc, rng, site="mlp.wi")
     if mlp_kind in ("swiglu", "geglu"):
-        g = linear(ep["wg"], h, imc, rng)
+        g = linear(ep["wg"], h, imc, rng, site="mlp.wi")
         act = jax.nn.silu if mlp_kind == "swiglu" else jax.nn.gelu
         hi = act(g.astype(jnp.float32)).astype(hi.dtype) * hi
     else:
         hi = jax.nn.gelu(hi.astype(jnp.float32)).astype(hi.dtype)
-    return linear(ep["wo"], hi, imc, rng)
+    return linear(ep["wo"], hi, imc, rng, site="mlp.wo")
 
 
 def apply_moe(

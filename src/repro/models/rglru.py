@@ -69,9 +69,10 @@ def _gates(params, xb):
 
 def rglru_forward(params, x, cfg, imc: IMCConfig = DIGITAL, rng=None, h0=None):
     """Full-sequence RG block. x: (B, S, d_model). Returns (y, h_last)."""
-    xb = linear(params["rg_x"], x, imc, rng)  # (B, S, W)
+    xb = linear(params["rg_x"], x, imc, rng, site="rg.x")  # (B, S, W)
     gate = jax.nn.gelu(
-        linear(params["rg_gate"], x, imc, rng).astype(jnp.float32)
+        linear(params["rg_gate"], x, imc, rng,
+               site="rg.gate").astype(jnp.float32)
     )
     xb = _causal_conv(xb, params["conv_w"], params["conv_b"])
     xb = ws(xb, "act_btf")
@@ -91,7 +92,7 @@ def rglru_forward(params, x, cfg, imc: IMCConfig = DIGITAL, rng=None, h0=None):
     a_s, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
     y = (h * gate).astype(x.dtype)
     y = ws(y, "act_btf")
-    out = linear(params["rg_out"], y, imc, rng)
+    out = linear(params["rg_out"], y, imc, rng, site="rg.out")
     return out, h[:, -1].astype(jnp.float32)
 
 
@@ -104,9 +105,10 @@ def init_rglru_cache(batch: int, width: int, conv_width: int, dtype):
 
 def rglru_decode(params, x, cache, cfg, imc: IMCConfig = DIGITAL, rng=None):
     """One-token step. x: (B, 1, d_model). Returns (y, new_cache)."""
-    xb = linear(params["rg_x"], x, imc, rng)  # (B, 1, W)
+    xb = linear(params["rg_x"], x, imc, rng, site="rg.x")  # (B, 1, W)
     gate = jax.nn.gelu(
-        linear(params["rg_gate"], x, imc, rng).astype(jnp.float32)
+        linear(params["rg_gate"], x, imc, rng,
+               site="rg.gate").astype(jnp.float32)
     )
     hist = jnp.concatenate([cache["conv"], xb], axis=1)  # (B, W_conv, W)
     conv_out = (
@@ -117,5 +119,5 @@ def rglru_decode(params, x, cache, cfg, imc: IMCConfig = DIGITAL, rng=None):
     a, gx = _gates(params, conv_out)  # (B, 1, W)
     h = a[:, 0] * cache["h"] + gx[:, 0]  # (B, W)
     y = (h[:, None, :] * gate).astype(x.dtype)
-    out = linear(params["rg_out"], y, imc, rng)
+    out = linear(params["rg_out"], y, imc, rng, site="rg.out")
     return out, {"conv": hist[:, 1:].astype(cache["conv"].dtype), "h": h}

@@ -82,7 +82,7 @@ def _split_proj(params, x, cfg, imc, rng):
         cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
     )
     gn = cfg.ssm_groups * cfg.ssm_state
-    proj = linear(params["in_proj"], x, imc, rng)
+    proj = linear(params["in_proj"], x, imc, rng, site="ssm.in_proj")
     z = proj[..., :d_inner]
     xbc = proj[..., d_inner : 2 * d_inner + 2 * gn]
     dt_raw = proj[..., 2 * d_inner + 2 * gn :]
@@ -162,7 +162,8 @@ def ssm_forward(params, x, cfg, imc: IMCConfig = DIGITAL, rng=None):
     y = y.reshape(b, s, d_inner).astype(x.dtype)
     y = _gated_norm(y, z, params["norm_scale"])
     y = ws(y, "act_btf")
-    return linear(params["out_proj"], y, imc, rng), final_state
+    return linear(params["out_proj"], y, imc, rng,
+                  site="ssm.out_proj"), final_state
 
 
 # ---------------------------------------------------------------------------
@@ -213,5 +214,5 @@ def ssm_decode(params, x, cache, cfg, imc: IMCConfig = DIGITAL, rng=None):
     y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
     y = y.reshape(b, 1, d_inner).astype(x.dtype)
     y = _gated_norm(y, z, params["norm_scale"])
-    out = linear(params["out_proj"], y, imc, rng)
+    out = linear(params["out_proj"], y, imc, rng, site="ssm.out_proj")
     return out, {"conv": new_conv, "state": state}

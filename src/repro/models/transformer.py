@@ -146,14 +146,16 @@ def apply_block_full(
     cache = None
     if kind in ("attn", "local"):
         dims = attn_dims(cfg, kind)
-        q, k, v = attn_lib._project_qkv(p["mixer"], h, dims, positions, cfg.imc, rng)
+        q, k, v = attn_lib._project_qkv(p["mixer"], h, dims, positions,
+                                        cfg.imc, rng, site_prefix=kind)
         if dims.window is not None and dims.window < h.shape[1]:
             ctx = attn_lib.banded_attention(q, k, v, dims)
         else:
             ctx = attn_lib.flash_attention(q, k, v, dims)
         b, s = h.shape[:2]
         ctx = ctx.reshape(b, s, dims.n_heads * dims.head_dim)
-        out = attn_lib.linear(p["mixer"]["wo"], ctx, cfg.imc, rng)
+        out = attn_lib.linear(p["mixer"]["wo"], ctx, cfg.imc, rng,
+                              site=f"{kind}.wo")
         if want_cache:
             cache = _pack_kv_cache(k, v, cache_len, dims.window, x.dtype,
                                    true_len)
@@ -193,7 +195,8 @@ def apply_block_decode(p, x, cfg: ArchConfig, kind: str, cache, pos, rng,
     if kind in ("attn", "local"):
         dims = attn_dims(cfg, kind)
         out, new_cache = attn_lib.attention_decode(
-            p["mixer"], h, cache, pos, dims, cfg.imc, rng, active=active
+            p["mixer"], h, cache, pos, dims, cfg.imc, rng, active=active,
+            site_prefix=kind,
         )
     elif kind == "ssm":
         out, new_cache = ssm_lib.ssm_decode(p["mixer"], h, cache, cfg, cfg.imc, rng)
@@ -267,7 +270,8 @@ def _pack_ssm_cache(p, h_in, state, cfg: ArchConfig, dtype):
     """SSD decode cache from prefill: final state + last conv-window inputs."""
     from repro.core.imc_linear import linear as _linear
 
-    proj = _linear(p["mixer"]["in_proj"], h_in[:, -(cfg.conv_width - 1):], cfg.imc)
+    proj = _linear(p["mixer"]["in_proj"], h_in[:, -(cfg.conv_width - 1):],
+                   cfg.imc, site="ssm.in_proj")
     d_inner, n_heads, conv_ch = ssm_lib.ssm_dims(
         cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
     )
@@ -279,5 +283,6 @@ def _pack_ssm_cache(p, h_in, state, cfg: ArchConfig, dtype):
 def _pack_rglru_cache(p, h_in, h_last, cfg: ArchConfig, dtype):
     from repro.core.imc_linear import linear as _linear
 
-    xb = _linear(p["mixer"]["rg_x"], h_in[:, -(cfg.rnn_conv_width - 1):], cfg.imc)
+    xb = _linear(p["mixer"]["rg_x"], h_in[:, -(cfg.rnn_conv_width - 1):],
+                 cfg.imc, site="rg.x")
     return {"conv": xb.astype(dtype), "h": h_last}

@@ -1,3 +1,10 @@
 """Optimizers and distributed-optimization tricks."""
-from repro.optim.adamw import AdamWConfig, OptState, init, update, warmup_cosine, global_norm  # noqa: F401
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    OptState,
+    global_norm,
+    init,
+    update,
+    warmup_cosine,
+)
 from repro.optim.compression import compressed_psum, init_residual  # noqa: F401

@@ -1,2 +1,7 @@
 """Fault-tolerant runtime: retries, deadlines, elastic re-mesh."""
-from repro.runtime.fault import FaultConfig, StepTimeout, TrainLoopRunner, elastic_remesh  # noqa: F401
+from repro.runtime.fault import (  # noqa: F401
+    FaultConfig,
+    StepTimeout,
+    TrainLoopRunner,
+    elastic_remesh,
+)

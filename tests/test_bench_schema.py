@@ -6,6 +6,8 @@ import os
 
 import pytest
 
+from benchmarks.check_regression import SUBSTRATE_REQUIRED_PREFIXES
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_FILES = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
 
@@ -27,8 +29,8 @@ def test_committed_bench_files_exist():
                          ids=[os.path.basename(p) for p in BENCH_FILES])
 def test_bench_schema(path):
     payload = _load(path)
-    assert payload["schema_version"] == 2
-    assert payload["schema"] == "repro-imc-bench/v2"
+    assert payload["schema_version"] == 2.1
+    assert payload["schema"] == "repro-imc-bench/v2.1"
     meta = payload["meta"]
     for key in REQUIRED_META:
         assert meta.get(key), f"meta.{key} missing/empty"
@@ -37,6 +39,12 @@ def test_bench_schema(path):
         assert "error" not in body, f"{suite}: committed artifact has error"
         assert body.get("records"), f"{suite}: empty records"
         assert body.get("wall_s") is not None
+        for rec in body["records"]:
+            # schema v2.1: serve-suite records name the Substrate they
+            # ran on / billed (also enforced by check_regression.py)
+            if rec.get("bench", "").startswith(SUBSTRATE_REQUIRED_PREFIXES):
+                assert rec.get("substrate"), \
+                    f"{suite}: record missing 'substrate' (schema v2.1)"
 
 
 def _energy_records():

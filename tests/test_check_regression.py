@@ -7,31 +7,34 @@ import os
 
 import pytest
 
-from benchmarks.check_regression import (check_pair, compare_payloads, main)
+from benchmarks.check_regression import check_pair, compare_payloads, main
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _payload():
     return {
-        "schema_version": 2,
+        "schema_version": 2.1,
         "suites": {
             "serve": {
                 "wall_s": 1.0,
                 "records": [
                     {"bench": "serve", "config": "paged_engine",
-                     "mode": "digital", "slots": 4,
+                     "mode": "digital", "substrate": "digital", "slots": 4,
                      "tok_s": 2700.0, "wall_s": 0.02,
                      "kv_bytes_per_active_token": 1212.8,
                      "prefill_calls": 6, "decode_steps": 14},
-                    {"bench": "serve_summary", "mode": "digital", "slots": 4,
+                    {"bench": "serve_summary", "mode": "digital",
+                     "substrate": "digital", "slots": 4,
                      "speedup_tok_s": 1.37, "ttft_ratio": 1.0,
                      "kv_reduction": 3.08},
                     {"bench": "serve_energy", "kind": "qs",
+                     "substrate": "imc_bitserial",
                      "snr_t_target_db": 14.0,
                      "j_per_token": 5.7e-4, "edp_per_token": 1.9e-9,
                      "b_adc": 6},
                     {"bench": "serve_energy_crossover",
+                     "substrate": "mixed",
                      "snr_low_db": 14.0, "snr_high_db": 26.0,
                      "qs_feasible_low": True, "qs_feasible_high": False,
                      "best_kind_high": "qr", "crossover": True},
@@ -123,8 +126,32 @@ def test_new_current_records_allowed():
     cur = _payload()
     cur["suites"]["serve"]["records"].append(
         {"bench": "serve", "config": "new_engine", "mode": "digital",
-         "slots": 4, "kv_bytes_per_active_token": 1.0})
+         "substrate": "digital", "slots": 4,
+         "kv_bytes_per_active_token": 1.0})
     assert compare_payloads(_payload(), cur) == []
+
+
+def test_missing_substrate_field_fails_with_clear_message():
+    """Bench schema v2.1: a serve record without its 'substrate' field must
+    fail the gate with an actionable message - on either side of the pair."""
+    cur = _payload()
+    del cur["suites"]["serve"]["records"][2]["substrate"]
+    fails = compare_payloads(_payload(), cur)
+    assert any("missing its 'substrate' field" in f and "v2.1" in f
+               and "regenerate" in f for f in fails), fails
+    base = _payload()
+    del base["suites"]["serve"]["records"][0]["substrate"]
+    fails = compare_payloads(base, _payload())
+    assert any(f.startswith("baseline:") for f in fails), fails
+
+
+def test_substrate_value_change_is_identity_change():
+    """'substrate' is an ID field: flipping it reads as a dropped baseline
+    record (the bench no longer reports that substrate), not metric drift."""
+    cur = _payload()
+    cur["suites"]["serve"]["records"][2]["substrate"] = "imc_analytic"
+    fails = compare_payloads(_payload(), cur)
+    assert any("missing record" in f for f in fails)
 
 
 @pytest.mark.parametrize("path", sorted(glob.glob(

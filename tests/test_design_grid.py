@@ -4,8 +4,8 @@ import numpy as np
 import pytest
 
 from repro.core import design
-from repro.core.quant import UNIFORM_STATS
 from repro.core.compute_models import TECH_65NM
+from repro.core.quant import UNIFORM_STATS
 
 
 @pytest.mark.parametrize("kind", ["qs", "qr", "cm"])

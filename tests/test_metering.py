@@ -8,12 +8,10 @@ import pytest
 
 from repro import configs
 from repro.core import scaling
-from repro.core.design import (T_REDUCE_LEVEL, optimize, pareto_sweep,
-                               workload_metrics)
+from repro.core.design import T_REDUCE_LEVEL, optimize, pareto_sweep, workload_metrics
 from repro.core.mapping import MatmulShape, per_token_matmul_shapes
 from repro.launch import breakdown
-from repro.launch.metering import (DPMeter, energy_for_tokens,
-                                   serve_energy_report)
+from repro.launch.metering import DPMeter, energy_for_tokens, serve_energy_report
 from repro.launch.serve import Engine, Request, serve
 from repro.models import init_params
 

@@ -3,8 +3,8 @@ import numpy as np
 import pytest
 
 from repro.core import precision as prec
-from repro.core.quant import SignalStats, UNIFORM_STATS, db
 from repro.core import snr as snr_lib
+from repro.core.quant import SignalStats, UNIFORM_STATS, db
 
 
 def test_bgc_formula():

@@ -171,3 +171,94 @@ def test_block_allocator_all_or_nothing(num_blocks, n):
     else:
         assert got is None
         assert alloc.free_count == num_blocks - 1  # nothing leaked
+
+
+# ---------------------------------------------------------------------------
+# substrate Calibration invariants (core.substrate)
+# ---------------------------------------------------------------------------
+
+import json
+
+from repro.core.substrate import Calibration, CalibrationRecorder, SiteStats
+
+
+def _batches_strategy():
+    """Small float batches: lists of (rows, k) activation blocks."""
+    return st.lists(
+        st.integers(0, 2**16),  # per-batch seed
+        min_size=1, max_size=4,
+    )
+
+
+def _mk_batch(seed, rows=5, k=8, m=4):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(rows, k)) * rng.uniform(0.1, 3.0)
+    w = rng.normal(size=(k, m))
+    return x, w
+
+
+def _observe_all(rec, seeds, site="mlp.wi"):
+    for s in seeds:
+        x, w = _mk_batch(s)
+        rec.observe(site, jnp.asarray(x), jnp.asarray(w))
+    jax.effects_barrier()
+
+
+@given(seeds=_batches_strategy(), order_seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_calibration_batch_order_invariant(seeds, order_seed):
+    """Frozen ranges are running maxima: observation order cannot matter."""
+    shuffled = list(seeds)
+    np.random.default_rng(order_seed).shuffle(shuffled)
+    a, b = CalibrationRecorder(), CalibrationRecorder()
+    _observe_all(a, seeds)
+    _observe_all(b, shuffled)
+    assert a.finalize() == b.finalize()
+
+
+@given(seeds=_batches_strategy(), pad_rows=st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_calibration_padding_invariant(seeds, pad_rows):
+    """Zero-row padding (the engine's bucket-pad artifact at the stat level)
+    cannot move any frozen range: |0| never raises a max and an all-zero row
+    contributes zero output std."""
+    a, b = CalibrationRecorder(), CalibrationRecorder()
+    for s in seeds:
+        x, w = _mk_batch(s)
+        a.observe("mlp.wi", jnp.asarray(x), jnp.asarray(w))
+        xp = np.concatenate([x, np.zeros((pad_rows, x.shape[1]))], axis=0)
+        b.observe("mlp.wi", jnp.asarray(xp), jnp.asarray(w))
+    jax.effects_barrier()
+    assert a.finalize() == b.finalize()
+
+
+@given(seeds=_batches_strategy(), extra=_batches_strategy())
+@settings(max_examples=25, deadline=None)
+def test_calibration_superset_never_shrinks(seeds, extra):
+    """Calibrating on a superset of batches never shrinks any range."""
+    small, big = CalibrationRecorder(), CalibrationRecorder()
+    _observe_all(small, seeds)
+    _observe_all(big, seeds + extra)
+    cs, cb = small.finalize(), big.finalize()
+    for name, st_small in cs.sites:
+        st_big = cb.get(name)
+        assert st_big.x_max >= st_small.x_max
+        assert st_big.w_max >= st_small.w_max
+        assert st_big.sigma_yo >= st_small.sigma_yo
+
+
+@given(
+    entries=st.dictionaries(
+        st.sampled_from(["attn.wq", "attn.wo", "mlp.wi", "mlp.wo",
+                         "lm_head", "*"]),
+        st.tuples(*(st.floats(1e-9, 1e9, allow_nan=False) for _ in range(3))),
+        min_size=1, max_size=6,
+    )
+)
+@settings(max_examples=40, deadline=None)
+def test_calibration_pytree_and_json_roundtrip_lossless(entries):
+    cal = Calibration(tuple(
+        (name, SiteStats(*vals)) for name, vals in entries.items()))
+    leaves, treedef = jax.tree_util.tree_flatten(cal)
+    assert jax.tree_util.tree_unflatten(treedef, leaves) == cal
+    assert Calibration.from_dict(json.loads(json.dumps(cal.to_dict()))) == cal

@@ -8,8 +8,7 @@ import pytest
 
 from repro import configs
 from repro.configs.base import ArchConfig
-from repro.launch.serve import (Engine, Request, needs_exact_prefill,
-                                prefill_bucket, serve)
+from repro.launch.serve import Engine, Request, needs_exact_prefill, prefill_bucket, serve
 from repro.models import decode_step, init_params, prefill
 
 TINY = dict(

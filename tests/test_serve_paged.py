@@ -22,6 +22,7 @@ from benchmarks.serve_bench import ContiguousEngine, drive_engine
 from repro import configs
 from repro.configs.base import ArchConfig
 from repro.core.imc_linear import IMCConfig
+from repro.core.substrate import as_substrate, calibrate_model
 from repro.launch.serve import BlockAllocator, Engine, Request, serve
 from repro.models import decode_step, init_params, prefill
 
@@ -135,6 +136,53 @@ def test_solo_paged_matches_sequential(substrate):
                                  max_new=max_new)])
     ref = _greedy_sequential(cfg, reqs[0].prompt, max_new)
     assert out[0].out == ref, (substrate, out[0].out, ref)
+
+
+@pytest.mark.parametrize("substrate", ["imc_analytic", "imc_bitserial"])
+def test_frozen_calibration_engine_matches_sequential(substrate):
+    """THE case PR 3 had to skip: with a FROZEN-calibration substrate the
+    IMC quantizer ranges are compile-time constants, so the batched paged
+    engine (multi-row admission, bucket padding, fused decode over mixed
+    slots) is bit-identical to solo sequential execution in the IMC
+    substrates too - batched-engine==sequential now holds on all three."""
+    base = configs.get_smoke("musicgen-medium")
+    cfg_dyn = _with_substrate(base, substrate)
+    params = jax_params(cfg_dyn)
+    ref_batch = np.random.default_rng(1).integers(0, base.vocab_size, (2, 24))
+    cfg = calibrate_model(cfg_dyn, params, [ref_batch])
+    _PARAMS[id(cfg)] = params  # identical weights for engine + reference
+    assert as_substrate(cfg.imc).policy == "frozen"
+    lens = [5, 9, 17] if substrate != "imc_bitserial" else [5, 9]
+    max_new = 5 if substrate != "imc_bitserial" else 4
+    reqs = _requests(cfg, lens, max_new)
+    engine = Engine(cfg, params, batch_slots=4, cache_len=32 + max_new + 8,
+                    max_chunk=4)
+    out = {r.rid: r.out for r in serve(
+        engine, [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+                 for r in reqs])}
+    for r in reqs:
+        ref = _greedy_sequential(cfg, r.prompt, r.max_new)
+        assert out[r.rid] == ref, (substrate, r.rid, out[r.rid], ref)
+
+
+@pytest.mark.parametrize("substrate", ["imc_analytic", "imc_bitserial"])
+def test_dynamic_substrate_reproduces_legacy_engine(substrate):
+    """Regression pin: a dynamic-policy Substrate object reproduces today's
+    batch-coupled IMCConfig outputs bit-exactly through the whole engine
+    (same ops, same per-batch quantizer statistics)."""
+    base = configs.get_smoke("musicgen-medium")
+    cfg_legacy = _with_substrate(base, substrate)
+    cfg_sub = base.replace(imc=as_substrate(cfg_legacy.imc))
+    params = jax_params(cfg_legacy)
+    _PARAMS[id(cfg_sub)] = params
+    lens = [5, 9] if substrate != "imc_bitserial" else [5]
+    max_new = 4
+    outs = []
+    for cfg in (cfg_legacy, cfg_sub):
+        reqs = _requests(cfg, lens, max_new)
+        engine = Engine(cfg, params, batch_slots=2, cache_len=32, max_chunk=4)
+        outs.append({r.rid: r.out for r in serve(engine, reqs)})
+    assert outs[0] == outs[1], (substrate, outs)
 
 
 def test_request_spanning_many_blocks():

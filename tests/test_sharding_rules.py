@@ -1,7 +1,7 @@
 """Sharding-rule unit tests (pure logic, no devices)."""
+import os
 import subprocess
 import sys
-import os
 
 import pytest
 from jax.sharding import PartitionSpec as P

@@ -1,0 +1,329 @@
+"""First-class Substrate API: per-site resolution, calibration policies,
+bit-exact dynamic-mode compatibility, batch invariance under frozen
+calibration, the deprecation shim, and substrate-billed metering."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.design import optimize, with_b_adc
+from repro.core.imc_linear import IMCConfig, linear
+from repro.core.mapping import MatmulShape
+from repro.core.substrate import (
+    AnalyticIMC,
+    BitSerialIMC,
+    Calibration,
+    CalibrationRecorder,
+    DigitalSubstrate,
+    SiteStats,
+    Substrate,
+    as_substrate,
+    recording,
+    substrate_for_design,
+    substrate_from_flag,
+)
+from repro.launch.metering import (
+    DPMeter,
+    energy_for_tokens,
+    serve_energy_report,
+    substrate_energy_for_tokens,
+)
+
+K1, K2, K3 = jax.random.split(jax.random.PRNGKey(0), 3)
+X = jax.random.normal(K1, (16, 256))
+W = jax.random.normal(K2, (256, 64)) / 16
+
+
+def _calibration(sub, site="mlp.wi"):
+    rec = CalibrationRecorder()
+    with recording(rec):
+        linear(W, X, sub, site=site)
+    return rec.finalize()
+
+
+# ---------------------------------------------------------------------------
+# construction, normalization, shim
+# ---------------------------------------------------------------------------
+
+
+def test_as_substrate_maps_modes_to_classes():
+    assert isinstance(as_substrate(None), DigitalSubstrate)
+    assert isinstance(as_substrate(IMCConfig(mode="digital")), DigitalSubstrate)
+    assert isinstance(as_substrate(IMCConfig(mode="imc_analytic")), AnalyticIMC)
+    assert isinstance(as_substrate(IMCConfig(mode="imc_bitserial")),
+                      BitSerialIMC)
+    # exotic modes fall back to the base class, mode preserved
+    fq = as_substrate(IMCConfig(mode="fakequant"))
+    assert type(fq) is Substrate and fq.name == "fakequant"
+    # substrates pass through untouched
+    sub = AnalyticIMC(bx=7, bw=7)
+    assert as_substrate(sub) is sub
+
+
+def test_substrate_is_hashable_and_replaceable():
+    sub = BitSerialIMC(bx=6, bw=6, v_wl=0.7)
+    assert hash(sub) == hash(BitSerialIMC(bx=6, bw=6, v_wl=0.7))
+    assert sub == BitSerialIMC(bx=6, bw=6, v_wl=0.7)
+    assert sub != BitSerialIMC(bx=7, bw=7, v_wl=0.7)
+    froz = sub.frozen(_calibration(sub))
+    assert froz.policy == "frozen" and froz.imc == sub.imc
+    assert froz.dynamic().policy == "dynamic"
+    # dataclasses.replace goes through the subclass constructor
+    assert dataclasses.replace(froz, policy="dynamic",
+                               calibration=None) == sub
+
+
+def test_mode_mismatch_rejected():
+    with pytest.raises(ValueError):
+        AnalyticIMC(imc=IMCConfig(mode="imc_bitserial"))
+    with pytest.raises(ValueError):
+        Substrate(policy="frozen")  # frozen needs a calibration
+    with pytest.raises(ValueError):
+        Substrate(policy="sometimes")
+
+
+def test_deprecation_shim_warns_and_builds():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        sub = substrate_from_flag("imc_bitserial", bx=5, bw=5)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert isinstance(sub, BitSerialIMC) and sub.imc.bx == 5
+
+
+def test_tier1_emits_no_deprecation_warnings():
+    """The migrated call paths never route through the shim."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        linear(W, X, IMCConfig(mode="imc_analytic", bx=7, bw=7), rng=K3)
+        linear(W, X, AnalyticIMC(bx=7, bw=7), rng=K3)
+    assert not any(issubclass(x.category, DeprecationWarning) for x in w)
+
+
+# ---------------------------------------------------------------------------
+# per-site override resolution
+# ---------------------------------------------------------------------------
+
+
+def test_site_override_matching():
+    sub = AnalyticIMC(bx=7, bw=7, b_adc=6).with_overrides({
+        "lm_head": {"b_adc": 10},
+        "attn": {"b_adc": 8},
+        "*": {"bx": 6},
+    })
+    assert sub.site_config("lm_head").b_adc == 10
+    assert sub.site_config("attn.wq").b_adc == 8  # group prefix
+    assert sub.site_config("attn.wo").b_adc == 8
+    assert sub.site_config("mlp.wi").b_adc == 6  # falls to "*": bx only
+    assert sub.site_config("mlp.wi").bx == 6
+    assert sub.site_config(None).bx == 6  # unknown site -> "*"
+    # base object untouched
+    assert AnalyticIMC(bx=7, bw=7, b_adc=6).site_config("lm_head").b_adc == 6
+
+
+def test_design_for_site_override_wins():
+    pt = optimize(n=512, snr_t_target_db=14.0)
+    pt_hi = with_b_adc(pt, pt.b_adc + 2)
+    sub = substrate_for_design(pt).with_overrides({"lm_head": {"design": pt_hi}})
+    assert sub.design_for_site("mlp.wi") == pt
+    assert sub.design_for_site("lm_head") == pt_hi
+
+
+def test_with_b_adc_identity_and_monotone():
+    pt = optimize(n=512, snr_t_target_db=14.0)
+    assert with_b_adc(pt, pt.b_adc) == pt
+    hi = with_b_adc(pt, pt.b_adc + 2)
+    assert hi.snr_t_db >= pt.snr_t_db
+    assert hi.energy_per_dp > pt.energy_per_dp
+
+
+# ---------------------------------------------------------------------------
+# dynamic policy: bit-exact with the legacy IMCConfig plumbing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["fakequant", "imc_analytic", "imc_bitserial"])
+def test_dynamic_substrate_matches_imcconfig_bit_exact(mode):
+    cfg = IMCConfig(mode=mode, bx=7, bw=7)
+    y_legacy = np.asarray(linear(W, X, cfg, rng=K3))
+    y_sub = np.asarray(linear(W, X, as_substrate(cfg), rng=K3))
+    np.testing.assert_array_equal(y_legacy, y_sub)
+
+
+# ---------------------------------------------------------------------------
+# frozen policy: batch-composition invariance at the linear level
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cls", [AnalyticIMC, BitSerialIMC])
+def test_frozen_linear_is_batch_invariant(cls):
+    sub = cls(bx=7, bw=7)
+    frozen = sub.frozen(_calibration(sub))
+    y_full = np.asarray(linear(W, X, frozen, site="mlp.wi"))
+    y_solo = np.asarray(linear(W, X[3:5], frozen, site="mlp.wi"))
+    np.testing.assert_array_equal(y_full[3:5], y_solo)
+    # dynamic stats are batch-coupled: the same slice differs (the behaviour
+    # frozen calibration exists to remove) - scale X so max|x| moves
+    y_dyn_full = np.asarray(linear(W, X.at[0, 0].set(40.0), sub))
+    y_dyn_solo = np.asarray(linear(W, X[3:5], sub))
+    assert not np.array_equal(y_dyn_full[3:5], y_dyn_solo)
+
+
+def test_frozen_uses_star_fallback_for_unknown_site():
+    sub = AnalyticIMC(bx=7, bw=7)
+    frozen = sub.frozen(_calibration(sub, site="mlp.wi"))
+    y1 = np.asarray(linear(W, X, frozen, site="never.seen"))
+    y2 = np.asarray(linear(W, X, frozen, site="mlp.wi"))
+    np.testing.assert_array_equal(y1, y2)  # "*" == the only observed site
+
+
+def test_frozen_without_fallback_raises():
+    cal = Calibration((("mlp.wi", SiteStats(1.0, 1.0, 1.0)),))
+    frozen = AnalyticIMC(bx=7, bw=7).frozen(cal)
+    with pytest.raises(KeyError):
+        frozen.site_stats("never.seen")
+
+
+def test_calibration_recorder_merges_scanned_layers():
+    """Observing one site twice max-merges (the scan-over-layers case)."""
+    rec = CalibrationRecorder()
+    with recording(rec):
+        linear(W, X, AnalyticIMC(bx=7, bw=7), site="mlp.wi")
+        linear(W, 3.0 * X, AnalyticIMC(bx=7, bw=7), site="mlp.wi")
+    cal = rec.finalize()
+    solo = CalibrationRecorder()
+    with recording(solo):
+        linear(W, 3.0 * X, AnalyticIMC(bx=7, bw=7), site="mlp.wi")
+    assert cal.get("mlp.wi") == solo.finalize().get("mlp.wi")
+
+
+def test_recorder_works_under_jit():
+    """The scan-over-layers forward traces even eagerly; the recorder pulls
+    stats through jax.debug.callback, so it works under jit too."""
+    rec = CalibrationRecorder()
+    fn = jax.jit(lambda w, x: linear(w, x, AnalyticIMC(bx=7, bw=7),
+                                     site="mlp.wi"))
+    with recording(rec):
+        fn(W, X).block_until_ready()
+        jax.effects_barrier()
+    cal = rec.finalize()
+    assert cal.get("mlp.wi") is not None
+    assert cal.get("mlp.wi").x_max == pytest.approx(
+        float(jnp.max(jnp.abs(X))), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# kernels/ops: frozen operands make the public matmul batch-invariant
+# ---------------------------------------------------------------------------
+
+
+def test_imc_matmul_frozen_sigma_batch_invariant():
+    from repro.kernels.ops import IMCMatmulConfig, imc_matmul
+
+    cfg = IMCMatmulConfig(mode="imc_analytic", bx=7, bw=7, b_adc=8,
+                          snr_a_db=25.0, use_kernel=False)
+    kw = dict(x_max=4.0, w_max=float(jnp.max(jnp.abs(W))), sigma_yo=30.0)
+    y_full = np.asarray(imc_matmul(X, W, cfg, **kw))
+    y_solo = np.asarray(imc_matmul(X[3:5], W, cfg, **kw))
+    np.testing.assert_array_equal(y_full[3:5], y_solo)
+
+
+# ---------------------------------------------------------------------------
+# substrate-billed metering
+# ---------------------------------------------------------------------------
+
+SITES = [MatmulShape("mlp.wi", 512, 8, 2), MatmulShape("lm_head", 512, 4, 1)]
+
+
+def test_substrate_rollup_matches_uniform_design_exactly():
+    pt = optimize(n=512, snr_t_target_db=14.0)
+    sub = substrate_for_design(pt)
+    uni = energy_for_tokens(SITES, pt, 10)
+    via_sub = substrate_energy_for_tokens(SITES, sub, 10)
+    assert via_sub == uni  # bitwise: same additions in the same order
+
+
+def test_substrate_rollup_prices_per_site_overrides():
+    pt = optimize(n=512, snr_t_target_db=14.0)
+    pt_hi = with_b_adc(pt, pt.b_adc + 2)
+    sub = substrate_for_design(pt).with_overrides({"lm_head": {"design": pt_hi}})
+    base = substrate_energy_for_tokens(SITES, substrate_for_design(pt), 1)
+    boosted = substrate_energy_for_tokens(SITES, sub, 1)
+    # exactly the lm_head site's energy moved
+    delta = boosted["energy_per_token_j"] - base["energy_per_token_j"]
+    expected = (energy_for_tokens([SITES[1]], pt_hi, 1)["energy_per_token_j"]
+                - energy_for_tokens([SITES[1]], pt, 1)["energy_per_token_j"])
+    assert delta == pytest.approx(expected, rel=1e-12)
+    assert delta > 0
+
+
+def test_serve_energy_report_from_substrate():
+    pt = optimize(n=512, snr_t_target_db=14.0)
+    meter = DPMeter(sites=SITES)
+    meter.note_prefill(1, 8, true_lens=[5])
+    meter.note_decode(1, 5)
+    legacy = serve_energy_report(meter, pt, generated_tokens=6, requests=1)
+    via_sub = serve_energy_report(meter, substrate=substrate_for_design(pt),
+                                  generated_tokens=6, requests=1)
+    assert via_sub.prefill_j == legacy.prefill_j
+    assert via_sub.decode_j == legacy.decode_j
+    assert via_sub.design == pt
+    assert via_sub.summary()["substrate"] == substrate_for_design(pt).name
+    with pytest.raises(ValueError):
+        serve_energy_report(meter)  # neither design nor substrate
+    with pytest.raises(ValueError):
+        serve_energy_report(meter, pt, substrate=substrate_for_design(pt))
+    with pytest.raises(ValueError):
+        serve_energy_report(meter, substrate=AnalyticIMC())  # no design
+
+
+def test_engine_stamps_meter_with_its_substrate():
+    from repro import configs
+    from repro.launch.serve import Engine
+    from repro.models import init_params
+
+    cfg = configs.get_smoke("musicgen-medium")
+    sub = AnalyticIMC(bx=7, bw=7)
+    cfg = cfg.replace(imc=sub)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    meter = DPMeter(cfg)
+    engine = Engine(cfg, params, 2, 32, meter=meter)
+    assert engine.substrate is sub
+    assert meter.substrate is sub
+
+
+def test_forward_energy_accepts_substrate():
+    from repro import configs
+    from repro.launch import breakdown
+
+    cfg = configs.get("musicgen-medium")
+    pt = optimize(n=512, snr_t_target_db=14.0)
+    a = breakdown.forward_energy(cfg, pt, tokens=1)
+    b = breakdown.forward_energy(cfg, substrate_for_design(pt), tokens=1)
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# calibration round trips (non-hypothesis pins; property sweeps live in
+# tests/test_properties.py)
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_json_roundtrip_lossless(tmp_path):
+    sub = AnalyticIMC(bx=7, bw=7)
+    cal = _calibration(sub)
+    path = str(tmp_path / "cal.json")
+    cal.save(path)
+    assert Calibration.load(path) == cal
+
+
+def test_calibration_pytree_roundtrip_lossless():
+    cal = Calibration((("a.b", SiteStats(1.25, 2.5, 0.1)),
+                       ("*", SiteStats(3.0, 4.0, 5.0))))
+    leaves, treedef = jax.tree_util.tree_flatten(cal)
+    assert jax.tree_util.tree_unflatten(treedef, leaves) == cal
+    # tree_map traverses into the stats (Calibration is a real pytree)
+    doubled = jax.tree_util.tree_map(lambda v: v * 2, cal)
+    assert doubled.get("a.b").x_max == 2.5
