@@ -23,9 +23,11 @@ A baseline record missing from the current run is a failure (a silently
 dropped bench is exactly the "stale artifact" failure mode this gate
 exists for); extra current records are allowed (new benches land first).
 
-Bench schema v2.1: serve-suite records must carry a ``substrate`` field
-naming the Substrate they ran on / billed; :func:`validate_schema` fails
-either side of a pair with a clear message when it is missing.
+Bench schema v2.2: serve-suite records must carry a ``substrate`` field
+naming the Substrate they ran on / billed (since v2.1), and ``serve_drift``
+records must carry the full drift-report surface (detection, swap and
+recovery fields - new in v2.2); :func:`validate_schema` fails either side
+of a pair with a clear message when any of it is missing.
 """
 from __future__ import annotations
 
@@ -40,7 +42,7 @@ ID_FIELDS = (
     "bench", "config", "arch", "mode", "kind", "name", "substrate",
     "slots", "requests", "gen", "prompt_len", "prompt_lens",
     "B", "K", "M", "bx", "bw", "rows", "bank_rows", "n", "n_banks",
-    "snr_t_target_db", "snr_low_db", "snr_high_db",
+    "snr_t_target_db", "snr_low_db", "snr_high_db", "inject_scale",
 )
 
 # bench schema v2.1: every serve-suite record must name the execution
@@ -132,7 +134,31 @@ RULES: Dict[str, Tuple[str, float]] = {
     "qs_feasible_low": ("exact_str", 0.0),
     "qs_feasible_high": ("exact_str", 0.0),
     "crossover": ("exact_str", 0.0),
+    # drift-injection serve scenario (schema v2.2): the shadow-calibration
+    # loop is a deterministic function of the request schedule and the
+    # injected scale, so the detection/swap counters gate exactly; the
+    # absolute 1 dB ceiling on the post-swap gap IS the acceptance
+    # invariant ("SNR_T recovers to within 1 dB of a fresh-frozen
+    # reference"), not a diff against the baseline
+    "drift_detected": ("exact_str", 0.0),
+    "false_positives_clean": ("exact", 0.0),
+    "chunks_to_detect": ("exact", 0.0),
+    "detection_bound_chunks": ("exact", 0.0),
+    "swaps": ("exact", 0.0),
+    "shadow_samples": ("exact", 0.0),
+    "sites_drifted": ("exact", 0.0),
+    "degradation_db_max": ("rel", 0.05),
+    "recovery_gap_db_max": ("max_abs", 1.0),
+    "failed_requests": ("exact", 0.0),
 }
+
+# drift records must carry the full report surface: a record that says
+# "serve_drift" but lacks these can't express the acceptance invariant
+DRIFT_REQUIRED_FIELDS = (
+    "substrate", "drift_detected", "chunks_to_detect",
+    "detection_bound_chunks", "swaps", "sites_drifted",
+    "recovery_gap_db_max", "failed_requests",
+)
 
 
 def record_key(suite: str, rec: dict) -> str:
@@ -190,7 +216,7 @@ def compare_metric(name: str, base, cur) -> str:
 
 
 def validate_schema(payload: dict, label: str) -> List[str]:
-    """Bench-schema v2.1 structural checks (run on BOTH sides of a pair: a
+    """Bench-schema v2.2 structural checks (run on BOTH sides of a pair: a
     stale committed baseline must fail just as loudly as a bad CI run)."""
     failures: List[str] = []
     for suite, body in payload.get("suites", {}).items():
@@ -198,15 +224,23 @@ def validate_schema(payload: dict, label: str) -> List[str]:
             continue
         for rec in body.get("records", []):
             bench = rec.get("bench", "")
+            ident = {k: rec[k] for k in ("bench", "config", "kind",
+                                         "name") if k in rec}
             if bench.startswith(SUBSTRATE_REQUIRED_PREFIXES) \
                     and "substrate" not in rec:
-                ident = {k: rec[k] for k in ("bench", "config", "kind",
-                                             "name") if k in rec}
                 failures.append(
                     f"{label}: record {ident} is missing its 'substrate' "
                     f"field (required since bench schema v2.1: every serve "
                     f"record must name the Substrate it ran on/billed - "
                     f"regenerate the artifact with benchmarks/run.py)")
+            if bench == "serve_drift":
+                missing = [f for f in DRIFT_REQUIRED_FIELDS if f not in rec]
+                if missing:
+                    failures.append(
+                        f"{label}: serve_drift record {ident} is missing "
+                        f"{missing} (required since bench schema v2.2: a "
+                        f"drift record must carry the full detection/swap/"
+                        f"recovery report surface)")
     return failures
 
 

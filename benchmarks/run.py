@@ -71,11 +71,13 @@ def main() -> None:
         # the serve bench surface reports energy too: selecting the serve
         # suite pulls in the (memoized, deterministic) serve_energy rollup
         only.add("serve_energy")
-    # schema v2.1: serve-suite records must name the execution substrate
-    # they ran/billed ("substrate" field; enforced by check_regression.py)
+    # schema v2.2: serve-suite records name the execution substrate they
+    # ran/billed (since v2.1) and serve_drift records carry the full
+    # detection/swap/recovery report surface (both enforced by
+    # check_regression.py)
     payload = {
-        "schema": "repro-imc-bench/v2.1",
-        "schema_version": 2.1,
+        "schema": "repro-imc-bench/v2.2",
+        "schema_version": 2.2,
         "backend": jax.default_backend(),
         # machine/XLA provenance: lets the regression gate (and humans) tell
         # a real perf change from a toolchain change, and the schema test

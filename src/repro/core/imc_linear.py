@@ -227,6 +227,19 @@ def linear(
         rec.observe(site or substrate_lib.DEFAULT_SITE, x, w, y=y)
         return y if bias is None else y + bias
 
+    # passive shadow observation (online drift monitoring): the sampled
+    # forward executes its real substrate path below UNCHANGED - the shadow
+    # recorder only taps operand/output stats through debug callbacks.  The
+    # output fed to the recorder is the closest available pre-ADC proxy:
+    # the fakequant product for fakequant/analytic, the kernel output for
+    # bit-serial (post-ADC, a conservative sigma_yo proxy - drift detection
+    # is driven by the one-sided x_max/w_max tests either way).
+    shadow = substrate_lib.active_shadow_recorder()
+
+    def _shadow_note(y_obs):
+        if shadow is not None:
+            shadow.observe(site or substrate_lib.DEFAULT_SITE, x, w, y=y_obs)
+
     stats = sub.site_stats(site)  # None => dynamic per-batch statistics
     if stats is None:
         x_max = _dynamic_max(x)
@@ -239,6 +252,7 @@ def linear(
         xq = _fq_ste(x, cfg.bx, cfg.x_signed, x_max)
         wq = _fq_ste(w, cfg.bw, True, w_max)
         y = jnp.einsum("...k,km->...m", xq, wq)
+        _shadow_note(y)
         return y if bias is None else y + bias
 
     if cfg.mode == "imc_analytic":
@@ -246,6 +260,7 @@ def linear(
         xq = _fq_ste(x, cfg.bx, cfg.x_signed, x_max)
         wq = _fq_ste(w, cfg.bw, True, w_max)
         y = jnp.einsum("...k,km->...m", xq, wq)
+        _shadow_note(y)
         if stats is None:
             sigma_yo = jax.lax.stop_gradient(jnp.std(y) + 1e-9)
         else:
@@ -269,6 +284,7 @@ def linear(
         x2 = x.reshape((-1, x.shape[-1]))
         y = kops.imc_matmul(x2, w, mcfg, key=rng, x_max=x_max, w_max=w_max)
         y = y.reshape(lead + (w.shape[-1],)).astype(x.dtype)
+        _shadow_note(y)
         return y if bias is None else y + bias
 
     raise ValueError(f"unknown IMC mode {cfg.mode!r}")

@@ -40,6 +40,23 @@ is the max per-row output std - so frozen ranges are invariant to batch
 order and to zero-row padding, calibrating on a superset of batches never
 shrinks a range, and a :class:`Calibration` round-trips losslessly through
 its pytree and through JSON.
+
+Hot-swap contract (online recalibration, ``runtime.drift`` +
+``launch.serve.Engine.swap_calibration``): a frozen calibration may be
+replaced at runtime, but ONLY at chunk boundaries - never inside a fused
+decode scan or a batched prefill call - so within any one chunk every row
+quantizes against one consistent set of ranges and the batched == sequential
+bit-identity holds chunk by chunk.  The serve engine passes the Calibration
+pytree as a TRACED argument to its jitted decode/prefill functions; the jit
+cache is therefore keyed on the calibration's treedef (the sorted site-name
+tuple is pytree aux data), and a refreshed calibration that preserves the
+frozen site-name set (``runtime.drift.refreshed_calibration`` guarantees
+this) swaps in as new leaf values on the SAME compiled executables - an
+atomic host-side pointer update, no recompile storm.  Live traffic is
+observed for drift through :func:`shadow_recording`, the passive counterpart
+of :func:`recording`: the sampled forward executes its real substrate path
+unchanged (outputs bit-identical) while running-maxima stats stream out
+through debug callbacks.
 """
 from __future__ import annotations
 
@@ -202,6 +219,13 @@ class CalibrationRecorder:
             entries[DEFAULT_SITE] = merged
         return Calibration(tuple(entries.items()))
 
+    def reset(self):
+        """Drop the accumulated stats IN PLACE.  The instance identity is
+        preserved on purpose: shadow-traced executables bind the recorder
+        object at trace time, so replacing the instance (rather than
+        resetting it) would orphan every compiled shadow function."""
+        self._acc.clear()
+
 
 _ACTIVE = threading.local()
 
@@ -222,6 +246,39 @@ def recording(recorder: CalibrationRecorder):
         yield recorder
     finally:
         _ACTIVE.recorder = prev
+
+
+def active_shadow_recorder() -> Optional[CalibrationRecorder]:
+    return getattr(_ACTIVE, "shadow", None)
+
+
+@contextlib.contextmanager
+def shadow_recording(recorder: CalibrationRecorder):
+    """Passively observe every non-digital ``imc_linear.linear`` call into
+    ``recorder`` WITHOUT changing execution.
+
+    Unlike :func:`recording` (which swaps the calibration-pass fakequant
+    proxy in for the real substrate path), a shadow-observed forward runs
+    its real substrate path unchanged - same ops, bit-identical outputs -
+    and only streams running-maxima stats out through ``jax.debug.callback``.
+    This is what lets the serve engine sample LIVE traffic for drift
+    detection (``runtime.drift``) without breaking the frozen-policy
+    batch-invariance contract.
+
+    Trace-time semantics: a jitted function first traced inside this context
+    bakes the observation callbacks (bound to THIS recorder instance) into
+    its compiled executable; later calls feed the same recorder whether or
+    not the context is active.  Callers therefore keep separate jit cache
+    entries for shadow and non-shadow variants and a persistent recorder
+    instance (see ``CalibrationRecorder.reset``).  Flush with
+    ``jax.effects_barrier()`` before reading the accumulated stats.
+    """
+    prev = active_shadow_recorder()
+    _ACTIVE.shadow = recorder
+    try:
+        yield recorder
+    finally:
+        _ACTIVE.shadow = prev
 
 
 # ---------------------------------------------------------------------------

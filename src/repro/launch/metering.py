@@ -80,8 +80,51 @@ class DPMeter:
         # decode: billed = active rows x scan length
         self.decode_billed_tokens = 0
         self.decode_chunks = 0
+        # robustness / online-calibration counters (engine hook points; all
+        # O(1) host-side, same contract as the prefill/decode notes)
+        self.shadow_samples = 0
+        self.drift_checks = 0
+        self.drift_events = 0
+        self.calibration_swaps = 0
+        self.failed_requests = 0
+        self.drift_reports: List[dict] = []
 
     # -- engine hook points ---------------------------------------------------
+    def note_shadow_sample(self):
+        """One chunk / prefill group ran with shadow calibration recording."""
+        self.shadow_samples += 1
+
+    def note_drift_report(self, report: dict):
+        """One drift-detector check ran; ``report`` is the structured
+        ``runtime.drift.DriftReport.to_dict()`` payload."""
+        self.drift_checks += 1
+        if report.get("drifted"):
+            self.drift_events += 1
+        self.drift_reports.append(report)
+
+    def note_swap(self):
+        """The engine hot-swapped a refreshed calibration."""
+        self.calibration_swaps += 1
+
+    def note_request_failure(self):
+        """One request retired with a per-request error status."""
+        self.failed_requests += 1
+
+    def drift_summary(self) -> Optional[dict]:
+        """Structured rollup of the online-calibration activity this meter
+        observed (None if the workload ran without a drift monitor)."""
+        if not (self.shadow_samples or self.drift_checks
+                or self.calibration_swaps):
+            return None
+        return {
+            "shadow_samples": self.shadow_samples,
+            "drift_checks": self.drift_checks,
+            "drift_events": self.drift_events,
+            "calibration_swaps": self.calibration_swaps,
+            "failed_requests": self.failed_requests,
+            "last_report": self.drift_reports[-1] if self.drift_reports
+            else None,
+        }
     def note_prefill(self, r_real: int, bucket: int,
                      true_lens: Optional[Sequence[int]] = None):
         """One admitted prefill group: ``r_real`` real rows (pow2 pad rows
@@ -204,6 +247,9 @@ class EnergyReport:
     # the substrate whose (per-site) design points priced this workload;
     # None for legacy uniform-design rollups
     substrate: Optional[Substrate] = None
+    # structured online-calibration rollup (DPMeter.drift_summary()); None
+    # when the workload ran without a drift monitor
+    drift: Optional[dict] = None
 
     @property
     def total_j(self) -> float:
@@ -226,7 +272,7 @@ class EnergyReport:
         return 1.0 / self.delay_per_token_s if self.delay_per_token_s > 0 else float("inf")
 
     def summary(self) -> Dict[str, float]:
-        return {
+        out = {
             "substrate": (self.substrate.name if self.substrate is not None
                           else None),
             "arch_kind": self.design.arch_kind,
@@ -247,6 +293,11 @@ class EnergyReport:
             "delay_per_token_s": self.delay_per_token_s,
             "tok_s_compute": self.tok_s_compute,
         }
+        # drift activity rides along only when it happened: the legacy
+        # record shape is unchanged for drift-free workloads
+        if self.drift is not None:
+            out["drift"] = self.drift
+        return out
 
 
 def serve_energy_report(
@@ -298,6 +349,7 @@ def serve_energy_report(
         decode_j=dec["energy_j"],
         delay_per_token_s=dec["delay_per_token_s"],
         substrate=substrate,
+        drift=meter.drift_summary(),
     )
 
 

@@ -57,6 +57,28 @@ Engine design (the decode hot loop never leaves the device):
 
 Greedy sampling.  Finished sequences free their slot (and blocks) for the
 next request.
+
+Robustness (drift + faults):
+
+  shadow calibration   with a ``runtime.drift.DriftMonitor`` attached, every
+                       Nth decode chunk / prefill group runs through a
+                       shadow-traced variant of the same jitted function that
+                       streams running-maxima stats to the monitor's recorder
+                       (``core.substrate.shadow_recording`` - passive, outputs
+                       bit-identical, still one (slots, T) transfer per chunk);
+  atomic hot-swap      the Calibration pytree is a TRACED argument of every
+                       decode/prefill jit, so the jit cache is keyed on its
+                       treedef; ``swap_calibration`` installs a refreshed
+                       calibration with the same site names between chunks as
+                       a pure host-side pointer update - the compiled scan is
+                       reused, and within any one chunk all rows quantize
+                       against one consistent calibration;
+  failure isolation    a request that cannot be admitted (oversized) or whose
+                       prefill keeps failing retires with a per-request
+                       ``error`` status instead of killing the engine; a
+                       transient ``XlaRuntimeError`` on a decode chunk is
+                       retried once (the ``runtime.fault`` retry idiom) and,
+                       if it persists, fails only the requests in flight.
 """
 from __future__ import annotations
 
@@ -64,7 +86,7 @@ import argparse
 import dataclasses
 import logging
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +95,8 @@ import numpy as np
 from repro import configs
 from repro.core import substrate as substrate_lib
 from repro.models import decode_step, init_paged_cache, init_params, prefill
+from repro.runtime import drift as drift_lib
+from repro.runtime import fault as fault_lib
 
 log = logging.getLogger("repro.serve")
 
@@ -89,6 +113,14 @@ class Request:
     done: bool = False
     t_submit: Optional[float] = None
     t_first: Optional[float] = None  # first generated token on the host
+    # per-request failure status: a request that cannot be served (oversized,
+    # poisoned prefill, persistent device error mid-decode) finishes with
+    # done=True and the reason here - failures never escape to the engine
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.done and self.error is None
 
     @property
     def ttft(self) -> Optional[float]:
@@ -159,6 +191,19 @@ class BlockAllocator:
             self._free.append(b)
 
 
+def _cfg_with_calibration(cfg, calib):
+    """``cfg`` with its substrate's calibration replaced by ``calib`` (a
+    possibly-traced Calibration pytree).  Runs INSIDE jitted traces: this is
+    how the frozen quantizer ranges become runtime arguments of the decode
+    scan / prefill instead of baked compile-time constants, which is what
+    makes the hot-swap recompile-free."""
+    if calib is None:
+        return cfg
+    sub = dataclasses.replace(substrate_lib.as_substrate(cfg.imc),
+                              calibration=calib)
+    return cfg.replace(imc=sub)
+
+
 class Engine:
     """Fixed-slot continuous-batching engine: paged KV cache, batched
     bucketed prefill, fused decode scan.
@@ -172,7 +217,9 @@ class Engine:
     def __init__(self, cfg, params, batch_slots: int, cache_len: int,
                  rng: Optional[jax.Array] = None, max_chunk: int = 8,
                  block_size: int = DEFAULT_BLOCK,
-                 kv_blocks: Optional[int] = None, meter=None):
+                 kv_blocks: Optional[int] = None, meter=None,
+                 drift_monitor: Optional[drift_lib.DriftMonitor] = None,
+                 failure_injector: Optional[Callable[[str, Any], None]] = None):
         self.cfg = cfg
         self.params = params
         # the first-class execution substrate every matmul routes through
@@ -188,6 +235,24 @@ class Engine:
         self.meter = meter
         if meter is not None and getattr(meter, "substrate", None) is None:
             meter.substrate = self.substrate
+        # hot-swappable frozen calibration: passed as a TRACED argument to
+        # every decode/prefill jit (None under dynamic/digital substrates)
+        self._calib = (self.substrate.calibration
+                       if self.substrate.policy == "frozen" else None)
+        self.swap_count = 0
+        # online drift monitoring (requires a frozen substrate: shadow stats
+        # are compared against the frozen ranges)
+        if drift_monitor is not None and self._calib is None:
+            raise ValueError(
+                "drift monitoring requires a frozen-policy substrate "
+                "(there are no frozen ranges to compare shadow stats "
+                "against)")
+        self._drift = drift_monitor
+        # test/chaos hook: called as failure_injector(phase, info) right
+        # before the device call of a prefill ("prefill", rid tuple) or a
+        # decode chunk ("decode", chunk index); raising simulates a device
+        # error at exactly that point
+        self.failure_injector = failure_injector
         self.batch_slots = batch_slots
         self.block = block_size
         self.max_blocks = -(-cache_len // block_size)
@@ -223,9 +288,16 @@ class Engine:
         self.host_transfer_bytes = 0
         self.prefill_calls = 0
         self.prefill_rows = 0
+        # robustness counters
+        self.failed_requests = 0
+        self.decode_failures = 0
 
-        self._prefill_fns: Dict[Tuple[int, int], Any] = {}
-        self._decode_fns: Dict[int, Any] = {}
+        # jit caches keyed (..., shadow): the shadow variant of a function is
+        # traced under shadow_recording and carries the observation
+        # callbacks; the calibration pytree is a traced ARGUMENT of both, so
+        # a hot-swap (same site names -> same treedef) re-uses every entry
+        self._prefill_fns: Dict[Tuple[int, int, bool], Any] = {}
+        self._decode_fns: Dict[Tuple[int, bool], Any] = {}
         self._insert_fn = jax.jit(self._insert_impl)
         self._block_bytes, self._fixed_kv_bytes = self._kv_accounting()
 
@@ -290,16 +362,29 @@ class Engine:
         return (len(req.prompt) + req.max_new - 1 <= self.cache_len
                 and self._blocks_needed(req) <= self.alloc.num_blocks - 1)
 
-    def _check_fits(self, req: Request):
+    def _admission_error(self, req: Request) -> Optional[str]:
+        """Why ``req`` can NEVER be admitted (None if it can): the graceful
+        replacement for the old hard ``ValueError`` - an oversized request
+        retires with this as its per-request error status."""
         length = len(req.prompt)
         if length + req.max_new - 1 > self.cache_len:
-            raise ValueError(
-                f"prompt ({length}) + max_new ({req.max_new}) exceeds "
-                f"cache_len ({self.cache_len})")
+            return (f"prompt ({length}) + max_new ({req.max_new}) exceeds "
+                    f"cache_len ({self.cache_len})")
         if self._blocks_needed(req) > self.alloc.num_blocks - 1:
-            raise ValueError(
-                f"request {req.rid} needs {self._blocks_needed(req)} KV "
-                f"blocks; pool has {self.alloc.num_blocks - 1}")
+            return (f"request {req.rid} needs {self._blocks_needed(req)} KV "
+                    f"blocks; pool has {self.alloc.num_blocks - 1}")
+        return None
+
+    def fail_request(self, req: Request, error: str):
+        """Retire an unadmitted request with a per-request error status
+        (failure isolation: the engine and every other request keep going)."""
+        req.done = True
+        req.error = error
+        self.finished.append(req)
+        self.failed_requests += 1
+        if self.meter is not None:
+            self.meter.note_request_failure()
+        log.warning("request %d failed: %s", req.rid, error)
 
     def admit(self, req: Request) -> bool:
         """Single-request admission (compat shim over the batched path)."""
@@ -312,13 +397,18 @@ class Engine:
         PREFIX of the queue sharing the head's bucket: strict arrival order
         is preserved (grouping across later same-bucket requests would let
         short prompts overtake an earlier long one and inflate its TTFT).
-        Removes admitted requests from ``pending`` and returns them."""
+        Removes admitted requests from ``pending`` and returns the ones that
+        reached a slot; a head request that can never fit retires with an
+        error status instead of blocking the queue."""
         admitted: List[Request] = []
         while pending:
             free_slots = [i for i, s in enumerate(self.slots) if s is None]
             if not free_slots:
                 break
-            self._check_fits(pending[0])
+            err = self._admission_error(pending[0])
+            if err is not None:
+                self.fail_request(pending.pop(0), err)
+                continue
             bucket = self._bucket(pending[0])
             group: List[Request] = []
             reserved = 0
@@ -328,8 +418,8 @@ class Engine:
                     break
                 if not self._fits(r):
                     # an oversized non-head request ends the prefix BEFORE
-                    # any allocation; it raises via _check_fits when it
-                    # reaches the head (nothing admitted behind it leaks)
+                    # any allocation; it retires with an error status when
+                    # it reaches the head (nothing admitted behind it leaks)
                     break
                 need = self._blocks_needed(r)
                 if reserved + need > self.alloc.free_count:
@@ -338,13 +428,19 @@ class Engine:
                 reserved += need
             if not group:
                 break  # head-of-line request waits for blocks to free
-            self._admit_group(group, free_slots[: len(group)], bucket)
+            ok = self._admit_group(group, free_slots[: len(group)], bucket)
             del pending[: len(group)]
-            admitted.extend(group)
+            admitted.extend(ok)
         return admitted
 
     def _admit_group(self, group: List[Request], slot_ids: List[int],
-                     bucket: int):
+                     bucket: int) -> List[Request]:
+        """Prefill + insert one admitted group; returns the requests that
+        actually reached a slot.  A transient device error is retried once
+        (the shared ``runtime.fault`` idiom); if the batched prefill still
+        fails, its blocks are freed and each member retries SOLO, so a single
+        poison request errors out alone instead of taking the group (or the
+        engine) down with it."""
         now = time.perf_counter()
         r_real = len(group)
         r_pad = 1
@@ -367,11 +463,49 @@ class Engine:
             assert blocks is not None  # reserved in admit_pending
             self._slot_blocks[slot_ids[r]] = blocks
             bt_rows[r, : len(blocks)] = blocks
-        pf = self._prefill_fns.get((r_pad, bucket))
+        shadow = (self._drift is not None
+                  and self._drift.take_prefill_sample())
+        pf = self._prefill_fns.get((r_pad, bucket, shadow))
         if pf is None:
-            pf = self._prefill_fns[(r_pad, bucket)] = self._make_prefill()
-        tok0, cache1 = pf(self.params, jnp.asarray(toks),
-                          jnp.asarray(true_len), self._next_key())
+            pf = self._prefill_fns[(r_pad, bucket, shadow)] = \
+                self._make_prefill()
+        rids = tuple(r.rid for r in group)
+
+        def run_pf():
+            if self.failure_injector is not None:
+                self.failure_injector("prefill", rids)
+            if shadow:
+                with substrate_lib.shadow_recording(self._drift.recorder):
+                    return pf(self.params, jnp.asarray(toks),
+                              jnp.asarray(true_len), self._next_key(),
+                              self._calib)
+            return pf(self.params, jnp.asarray(toks), jnp.asarray(true_len),
+                      self._next_key(), self._calib)
+
+        try:
+            tok0, cache1 = fault_lib.call_with_retries(
+                run_pf, 1, retryable=fault_lib.is_transient_device_error,
+                describe=f"prefill group rids={list(rids)}", logger=log)
+        except Exception as e:
+            if not fault_lib.is_transient_device_error(e):
+                raise  # programming bugs must surface, not retire requests
+            for r in range(r_real):  # nothing was inserted: free the blocks
+                sid = slot_ids[r]
+                if self._slot_blocks[sid]:
+                    self.alloc.free(self._slot_blocks[sid])
+                    self._slot_blocks[sid] = []
+            if r_real == 1:
+                self.fail_request(
+                    group[0], f"prefill failed after retry: {e!r}")
+                return []
+            log.warning("batched prefill of %d requests failed (%r); "
+                        "re-admitting each solo to isolate the poison row",
+                        r_real, e)
+            ok: List[Request] = []
+            for r, req in enumerate(group):
+                ok.extend(self._admit_group([req], [slot_ids[r]],
+                                            self._bucket(req)))
+            return ok
         self.cache, self.last_token, self.pos = self._insert_fn(
             self.cache, {k: v for k, v in cache1.items() if k != "pos"},
             jnp.asarray(slot_vec), jnp.asarray(bt_rows), tok0,
@@ -383,6 +517,8 @@ class Engine:
             # bucket padding is billed work; pow2 pad rows are not
             self.meter.note_prefill(r_real, bucket,
                                     [len(r.prompt) for r in group])
+            if shadow:
+                self.meter.note_shadow_sample()
         tok0_host = np.asarray(tok0)  # one sync per GROUP (TTFT for all rows)
         t_first = time.perf_counter()
         for r, req in enumerate(group):
@@ -391,15 +527,19 @@ class Engine:
             req.t_first = t_first
             if len(req.out) >= req.max_new:
                 self._retire(slot_vec[r])
+        return list(group)
 
     def _make_prefill(self):
         cfg, bucketable = self.cfg, self.bucketable
 
-        def pf(params, toks, true_len, key):
+        def pf(params, toks, true_len, key, calib):
             # cache_len == bucket: the insert redistributes rows into blocks,
-            # so prefill never materializes the full-length contiguous cache
+            # so prefill never materializes the full-length contiguous cache.
+            # calib is the (traced) hot-swappable frozen calibration; None
+            # (an empty pytree) under dynamic/digital substrates.
+            run_cfg = _cfg_with_calibration(cfg, calib)
             logits, cache1 = prefill(
-                params, cfg, toks, cache_len=toks.shape[1], rng=key,
+                params, run_cfg, toks, cache_len=toks.shape[1], rng=key,
                 true_len=true_len if bucketable else None,
             )
             tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
@@ -478,16 +618,70 @@ class Engine:
             pos.at[slot_vec].set(true_len, mode="drop"),
         )
 
-    def _retire(self, i: int):
+    def _retire(self, i: int, error: Optional[str] = None):
         req = self.slots[i]
         req.done = True
+        req.error = error
         self.slots[i] = None
         self.finished.append(req)
+        if error is not None:
+            self.failed_requests += 1
+            if self.meter is not None:
+                self.meter.note_request_failure()
+            log.warning("request %d failed in slot %d: %s", req.rid, i, error)
         if self._slot_blocks[i]:
             # the stale device block table keeps pointing at these blocks;
             # that is safe because inactive rows write to the garbage block
             self.alloc.free(self._slot_blocks[i])
             self._slot_blocks[i] = []
+
+    # -- online calibration ----------------------------------------------------
+    def swap_calibration(self, calibration: substrate_lib.Calibration):
+        """Atomically install a refreshed frozen calibration.
+
+        Contract (documented in ``core.substrate``): call ONLY between
+        chunks - the engine is synchronous, so any call site outside
+        ``decode_chunk``/``_admit_group`` is a chunk boundary.  The refreshed
+        calibration must carry the same site names as the frozen one (same
+        pytree treedef; build it with ``runtime.drift.refreshed_calibration``)
+        so every compiled decode/prefill executable is re-used - the swap is
+        a host-side pointer update, never a recompile.
+        """
+        if self._calib is None:
+            raise ValueError(
+                "swap_calibration requires a frozen-policy substrate")
+        if calibration.site_names() != self._calib.site_names():
+            raise ValueError(
+                "refreshed calibration must preserve the frozen site-name "
+                "structure (same pytree treedef); merge with the frozen "
+                "calibration first (runtime.drift.refreshed_calibration): "
+                f"{calibration.site_names()} != {self._calib.site_names()}")
+        old = self.substrate
+        self.substrate = old.frozen(calibration)
+        self.cfg = self.cfg.replace(imc=self.substrate)
+        self._calib = calibration
+        self.swap_count += 1
+        if self.meter is not None:
+            self.meter.note_swap()
+            if self.meter.substrate is old:
+                self.meter.substrate = self.substrate
+
+    def _maybe_check_drift(self):
+        """After a shadow-sampled chunk: run the detector at the monitor's
+        cadence and hot-swap the refreshed calibration on a drifted report
+        (we are between chunks here, so the swap is atomic by construction)."""
+        mon = self._drift
+        report = mon.check(self._calib)
+        if report is None:
+            return
+        if self.meter is not None:
+            self.meter.note_drift_report(report.to_dict())
+        log.info("drift check %d: %s", mon.checks, report.summary_line())
+        if report.drifted and mon.cfg.auto_swap:
+            self.swap_calibration(mon.refreshed(self._calib))
+            mon.note_swap()
+            log.info("hot-swapped refreshed calibration (swap %d) at sites "
+                     "%s", self.swap_count, list(report.drifted_sites))
 
     # -- fused decode ----------------------------------------------------------
     def next_chunk(self) -> int:
@@ -504,12 +698,16 @@ class Engine:
     def _make_decode(self, n_steps: int):
         cfg = self.cfg
 
-        def chunk(params, cache, last_tok, pos, active, key):
+        def chunk(params, cache, last_tok, pos, active, key, calib):
+            # calib: the hot-swappable frozen calibration, a traced pytree
+            # argument - one consistent set of ranges for the WHOLE chunk
+            run_cfg = _cfg_with_calibration(cfg, calib)
+
             def step(carry, t):
                 cache, tok, pos = carry
                 k = None if key is None else jax.random.fold_in(key, t)
                 logits, new_cache = decode_step(
-                    params, cfg, tok, dict(cache, pos=pos), rng=k,
+                    params, run_cfg, tok, dict(cache, pos=pos), rng=k,
                     active=active,
                 )
                 nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
@@ -527,23 +725,59 @@ class Engine:
 
     def decode_chunk(self, n_steps: Optional[int] = None) -> np.ndarray:
         """Run ``n_steps`` fused decode steps; returns the (slots, T) token
-        block (the single device->host transfer of the chunk)."""
+        block (the single device->host transfer of the chunk).
+
+        A transient device error (``XlaRuntimeError``) is retried once via
+        the shared ``runtime.fault`` idiom - the chunk function is pure, so
+        the re-run is exact; if the error persists, only the requests in
+        flight retire with an error status and the engine survives."""
         if n_steps is None:
             n_steps = self.next_chunk()
         if n_steps <= 0:
             return np.zeros((self.batch_slots, 0), np.int32)
-        fn = self._decode_fns.get(n_steps)
+        shadow = (self._drift is not None and self.active > 0
+                  and self._drift.take_sample())
+        fn = self._decode_fns.get((n_steps, shadow))
         if fn is None:
-            fn = self._decode_fns[n_steps] = self._make_decode(n_steps)
-        if self.meter is not None:
-            # active slots at chunk start each run n_steps token-forwards
-            self.meter.note_decode(self.active, n_steps)
+            fn = self._decode_fns[(n_steps, shadow)] = \
+                self._make_decode(n_steps)
         active = jnp.asarray(
             np.array([s is not None for s in self.slots]))
-        self.cache, self.last_token, self.pos, toks = fn(
-            self.params, self.cache, self.last_token, self.pos, active,
-            self._next_key(),
-        )
+        args = (self.params, self.cache, self.last_token, self.pos, active,
+                self._next_key(), self._calib)
+
+        def run_chunk():
+            if self.failure_injector is not None:
+                self.failure_injector("decode", self.decode_calls)
+            if shadow:
+                with substrate_lib.shadow_recording(self._drift.recorder):
+                    return fn(*args)
+            return fn(*args)
+
+        try:
+            cache, last_token, pos, toks = fault_lib.call_with_retries(
+                run_chunk, 1,
+                retryable=fault_lib.is_transient_device_error,
+                describe=f"decode chunk {self.decode_calls}", logger=log)
+        except Exception as e:
+            if not fault_lib.is_transient_device_error(e):
+                raise  # programming bugs must surface, not retire requests
+            # persistent device error: the chunk never committed (device
+            # state is untouched - assignment below did not happen), so
+            # fail exactly the requests that were in flight and keep serving
+            self.decode_failures += 1
+            msg = f"decode chunk failed after retry: {e!r}"
+            log.warning("%s; failing %d in-flight requests", msg, self.active)
+            for i, req in enumerate(self.slots):
+                if req is not None:
+                    self._retire(i, error=msg)
+            return np.zeros((self.batch_slots, 0), np.int32)
+        self.cache, self.last_token, self.pos = cache, last_token, pos
+        if self.meter is not None:
+            # active slots at chunk start each ran n_steps token-forwards
+            self.meter.note_decode(int(np.asarray(active).sum()), n_steps)
+            if shadow:
+                self.meter.note_shadow_sample()
         block = np.asarray(toks)  # the one host transfer per chunk
         self.decode_calls += 1
         self.decode_steps += n_steps
@@ -555,12 +789,18 @@ class Engine:
             req.out.extend(int(t) for t in block[i, :take])
             if len(req.out) >= req.max_new:
                 self._retire(i)
+        if shadow:
+            self._maybe_check_drift()
         return block
 
 
 def serve(engine: Engine, requests: List[Request]) -> List[Request]:
-    """Drive the engine until every request finishes; returns them in
-    completion order."""
+    """Drive the engine until every request finishes (successfully or with a
+    per-request error status); returns them in completion order.
+
+    Graceful degradation: a head-of-line request the idle engine can never
+    admit (the old hard ``RuntimeError`` deadlock) retires with an error
+    status and serving continues for everyone else."""
     pending = list(requests)
     done_mark = len(engine.finished)
     while pending or engine.active:
@@ -569,12 +809,19 @@ def serve(engine: Engine, requests: List[Request]) -> List[Request]:
             log.info("admitted request %d len=%d (active=%d)",
                      req.rid, len(req.prompt), engine.active)
         if pending and not engine.active and not admitted:
-            raise RuntimeError(
-                "pending requests cannot be admitted into an idle engine "
-                "(slots or KV block pool too small)")
+            # nothing is running, nothing could be admitted, and the queue
+            # is non-empty: the head request is stuck (e.g. its block demand
+            # exceeds what an idle pool can ever free).  Retire IT, not the
+            # engine - everyone behind it gets served.
+            engine.fail_request(
+                pending.pop(0),
+                "cannot be admitted into an idle engine (slots or KV block "
+                "pool too small)")
+            continue
         engine.decode_chunk()
         for r in engine.finished[done_mark:]:
-            log.info("finished request %d: %d tokens", r.rid, len(r.out))
+            if r.error is None:
+                log.info("finished request %d: %d tokens", r.rid, len(r.out))
         done_mark = len(engine.finished)
     return engine.finished
 
@@ -609,6 +856,23 @@ def main(argv=None):
                          "before serving and disables the shared analog-"
                          "noise RNG, making IMC outputs batch-composition-"
                          "invariant (batched == sequential, bit-identical)")
+    ap.add_argument("--recalibrate", action="store_true",
+                    help="online calibration (requires --imc-policy frozen): "
+                         "shadow-record a sample of live chunks, detect "
+                         "range drift with the one-sided superset test, and "
+                         "hot-swap a refreshed calibration at a chunk "
+                         "boundary (no recompile, no pause)")
+    ap.add_argument("--drift-sample-every", type=int, default=2,
+                    help="shadow-record every Nth decode chunk / prefill "
+                         "group (with --recalibrate)")
+    ap.add_argument("--drift-check-every", type=int, default=2,
+                    help="run the drift detector every Nth shadow sample")
+    ap.add_argument("--inject-drift", default=None, metavar="SCALE@REQS",
+                    help="drift-injection demo: serve the first REQS "
+                         "requests, then scale the token embedding by SCALE "
+                         "(an activation-scale shift at every downstream "
+                         "site) and serve the rest; prints the drift report "
+                         "and the post-swap SNR_T recovery table")
     ap.add_argument("--energy-report", action="store_true",
                     help="meter the served traffic and print J/token, "
                          "J/request and EDP/token at the min-energy QS/QR/CM "
@@ -657,9 +921,20 @@ def main(argv=None):
         from repro.launch.metering import DPMeter
 
         meter = DPMeter(configs.get(args.arch))
+    monitor = None
+    if args.recalibrate:
+        if not (args.imc_mode and args.imc_policy == "frozen"):
+            ap.error("--recalibrate requires --imc-mode and "
+                     "--imc-policy frozen")
+        monitor = drift_lib.DriftMonitor(drift_lib.DriftConfig(
+            sample_every=args.drift_sample_every,
+            check_every=args.drift_check_every))
+    frozen0 = cfg.imc.calibration if args.imc_policy == "frozen" and \
+        args.imc_mode else None
     engine = Engine(cfg, params, args.batch, cache_len, rng=rng,
                     max_chunk=args.chunk, block_size=args.block,
-                    kv_blocks=args.kv_blocks, meter=meter)
+                    kv_blocks=args.kv_blocks, meter=meter,
+                    drift_monitor=monitor)
 
     rnp = np.random.default_rng(0)
     requests = [
@@ -669,7 +944,28 @@ def main(argv=None):
         for i in range(args.requests)
     ]
     t0 = time.perf_counter()
-    finished = serve(engine, requests)
+    if args.inject_drift:
+        scale_s, _, after_s = args.inject_drift.partition("@")
+        scale, after = float(scale_s), int(after_s or len(requests) // 2)
+        serve(engine, requests[:after])
+
+        # mid-workload scale shift on every mlp.wi weight: drifts w_max at
+        # mlp.wi and the activation range feeding mlp.wo.  The shift must
+        # live in the weights - the model is pre-norm, so an embedding-scale
+        # shift would be normalized away before every matmul site
+        def _scale_wi(p):
+            if isinstance(p, dict):
+                return {k: (v * scale if k == "wi" else _scale_wi(v))
+                        for k, v in p.items()}
+            return p
+
+        engine.params = _scale_wi(engine.params)
+        log.info("injected mlp.wi weight-scale drift x%.2f after %d "
+                 "requests", scale, after)
+        serve(engine, requests[after:])
+        finished = engine.finished
+    else:
+        finished = serve(engine, requests)
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.out) for r in finished)
     tok_s = total_tokens / dt if dt > 0 else float("nan")
@@ -683,6 +979,26 @@ def main(argv=None):
         engine.decode_steps, engine.prefill_calls, engine.prefill_rows,
         tok_s, ttft_ms, engine.host_transfer_bytes, engine.alloc.num_blocks,
     )
+    failed = [r for r in finished if r.error is not None]
+    if failed:
+        log.warning("%d request(s) finished with an error status: %s",
+                    len(failed), [r.rid for r in failed])
+    if monitor is not None:
+        c = monitor.counters()
+        print(f"online calibration: {c['shadow_samples']} shadow samples / "
+              f"{c['chunks_seen']} chunks, {c['drift_checks']} checks, "
+              f"{c['drift_events']} drift events, "
+              f"{c['calibration_swaps']} hot-swaps "
+              f"({engine.swap_count} applied)")
+        if monitor.last_report is not None:
+            print("last drift report: " + monitor.last_report.summary_line())
+        if monitor.last_observed is not None and frozen0 is not None:
+            rows = drift_lib.site_snr_table(
+                frozen0, engine._calib, monitor.last_observed,
+                bx=engine.substrate.imc.bx)
+            print("per-site SNR_T (stale frozen vs post-swap vs "
+                  "fresh-frozen reference):")
+            print(drift_lib.format_snr_table(rows))
     if meter is not None:
         from repro.core.design import optimize
         from repro.launch.metering import format_report, serve_energy_report

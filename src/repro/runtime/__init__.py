@@ -1,7 +1,20 @@
-"""Fault-tolerant runtime: retries, deadlines, elastic re-mesh."""
+"""Fault-tolerant runtime: retries, deadlines, elastic re-mesh, and online
+calibration-drift monitoring for frozen substrates."""
+from repro.runtime.drift import (  # noqa: F401
+    DriftConfig,
+    DriftMonitor,
+    DriftReport,
+    DriftThresholds,
+    detect_drift,
+    effective_snr_t_db,
+    refreshed_calibration,
+    site_snr_table,
+)
 from repro.runtime.fault import (  # noqa: F401
     FaultConfig,
     StepTimeout,
     TrainLoopRunner,
+    call_with_retries,
     elastic_remesh,
+    is_transient_device_error,
 )

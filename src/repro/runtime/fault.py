@@ -24,6 +24,52 @@ from repro.checkpoint import manager as ckpt
 
 log = logging.getLogger("repro.fault")
 
+try:  # the jaxlib runtime's catch-all for device-side faults
+    from jaxlib.xla_extension import XlaRuntimeError as _XlaRuntimeError
+except Exception:  # pragma: no cover - jaxlib layout drift
+
+    class _XlaRuntimeError(Exception):
+        pass
+
+
+#: exception types a retry is worth attempting for: device-side runtime
+#: errors (OOM blips, transient fabric faults), not Python-level bugs
+TRANSIENT_ERROR_TYPES = (_XlaRuntimeError,)
+
+
+def is_transient_device_error(e: BaseException) -> bool:
+    """True for device-runtime errors worth a retry (``XlaRuntimeError`` and
+    subclasses).  Python-level exceptions - shape errors, assertion failures,
+    programming bugs - are NOT transient: retrying them only hides the bug."""
+    return isinstance(e, TRANSIENT_ERROR_TYPES)
+
+
+def call_with_retries(fn: Callable[[], Any], max_retries: int, *,
+                      retryable: Optional[Callable[[BaseException], bool]] = None,
+                      describe: str = "step",
+                      logger: Optional[logging.Logger] = None):
+    """THE retry idiom: run ``fn()``, re-running it up to ``max_retries``
+    times when it raises an exception ``retryable`` accepts (default: any
+    ``Exception``); the final failure propagates to the caller.
+
+    Shared by the training loop (:class:`TrainLoopRunner`, which retries
+    everything except :class:`StepTimeout`) and the serve engine
+    (``launch.serve.Engine``, which retries only
+    :func:`is_transient_device_error` and then fails just the affected
+    requests) - one code path, so the two cannot drift apart.
+    """
+    lg = logger or log
+    for attempt in range(max_retries + 1):
+        try:
+            return fn()
+        except Exception as e:  # noqa: BLE001 - device errors are dynamic
+            if (retryable is not None and not retryable(e)) \
+                    or attempt >= max_retries:
+                raise
+            lg.warning("%s attempt %d failed: %r; retrying", describe,
+                       attempt, e)
+    raise AssertionError("unreachable")
+
 
 @dataclasses.dataclass
 class FaultConfig:
@@ -81,31 +127,32 @@ class TrainLoopRunner:
     # -- one guarded step ------------------------------------------------------
     def _guarded_step(self, state, batch, step: int):
         deadline = self.cfg.step_deadline_s
-        for attempt in range(self.cfg.max_step_retries + 1):
+
+        def attempt():
             t0 = time.monotonic()
-            try:
-                if self.failure_injector is not None:
-                    self.failure_injector(step)
-                new_state, metrics = self.step_fn(state, batch)
-                # block so stragglers/timeouts are observable
-                jax.block_until_ready(
-                    jax.tree_util.tree_leaves(metrics)[0]
-                    if jax.tree_util.tree_leaves(metrics)
-                    else jax.tree_util.tree_leaves(new_state)[0]
+            if self.failure_injector is not None:
+                self.failure_injector(step)
+            new_state, metrics = self.step_fn(state, batch)
+            # block so stragglers/timeouts are observable
+            jax.block_until_ready(
+                jax.tree_util.tree_leaves(metrics)[0]
+                if jax.tree_util.tree_leaves(metrics)
+                else jax.tree_util.tree_leaves(new_state)[0]
+            )
+            dt = time.monotonic() - t0
+            if deadline is not None and dt > deadline:
+                raise StepTimeout(
+                    f"step {step} took {dt:.1f}s > deadline {deadline}s"
                 )
-                dt = time.monotonic() - t0
-                if deadline is not None and dt > deadline:
-                    raise StepTimeout(
-                        f"step {step} took {dt:.1f}s > deadline {deadline}s"
-                    )
-                return new_state, metrics
-            except StepTimeout:
-                raise  # stragglers escalate to restart/reschedule
-            except Exception as e:  # noqa: BLE001 - device errors are dynamic
-                log.warning("step %d attempt %d failed: %r", step, attempt, e)
-                if attempt >= self.cfg.max_step_retries:
-                    raise
-        raise AssertionError("unreachable")
+            return new_state, metrics
+
+        # stragglers (StepTimeout) escalate to restart/reschedule, anything
+        # else is retried in place - the shared serve/train retry idiom
+        return call_with_retries(
+            attempt, self.cfg.max_step_retries,
+            retryable=lambda e: not isinstance(e, StepTimeout),
+            describe=f"step {step}",
+        )
 
     # -- the loop ---------------------------------------------------------------
     def run(self, total_steps: int) -> Tuple[Any, Dict]:

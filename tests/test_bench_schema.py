@@ -6,7 +6,10 @@ import os
 
 import pytest
 
-from benchmarks.check_regression import SUBSTRATE_REQUIRED_PREFIXES
+from benchmarks.check_regression import (
+    DRIFT_REQUIRED_FIELDS,
+    SUBSTRATE_REQUIRED_PREFIXES,
+)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_FILES = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
@@ -29,8 +32,8 @@ def test_committed_bench_files_exist():
                          ids=[os.path.basename(p) for p in BENCH_FILES])
 def test_bench_schema(path):
     payload = _load(path)
-    assert payload["schema_version"] == 2.1
-    assert payload["schema"] == "repro-imc-bench/v2.1"
+    assert payload["schema_version"] == 2.2
+    assert payload["schema"] == "repro-imc-bench/v2.2"
     meta = payload["meta"]
     for key in REQUIRED_META:
         assert meta.get(key), f"meta.{key} missing/empty"
@@ -45,6 +48,32 @@ def test_bench_schema(path):
             if rec.get("bench", "").startswith(SUBSTRATE_REQUIRED_PREFIXES):
                 assert rec.get("substrate"), \
                     f"{suite}: record missing 'substrate' (schema v2.1)"
+            # schema v2.2: drift records carry the full detection/swap/
+            # recovery report surface (also enforced by check_regression.py)
+            if rec.get("bench") == "serve_drift":
+                for field in DRIFT_REQUIRED_FIELDS:
+                    assert field in rec, \
+                        f"{suite}: serve_drift record missing {field!r} " \
+                        f"(schema v2.2)"
+
+
+def test_serve_drift_record_committed():
+    """The drift-injection scenario is part of the committed serve baseline:
+    detection happened inside the cadence bound, the hot-swap ran, and the
+    post-swap SNR_T gap to a fresh-frozen reference is inside the 1 dB
+    acceptance ceiling."""
+    payload = _load(os.path.join(ROOT, "BENCH_serve.json"))
+    recs = [r for r in payload["suites"]["serve"]["records"]
+            if r["bench"] == "serve_drift"]
+    assert recs, "BENCH_serve.json has no serve_drift record"
+    for r in recs:
+        assert r["drift_detected"] is True
+        assert r["false_positives_clean"] == 0
+        assert 0 <= r["chunks_to_detect"] <= r["detection_bound_chunks"]
+        assert r["swaps"] >= 1
+        assert r["sites_drifted"] >= 1
+        assert r["recovery_gap_db_max"] <= 1.0
+        assert r["failed_requests"] == 0
 
 
 def _energy_records():

@@ -262,3 +262,80 @@ def test_calibration_pytree_and_json_roundtrip_lossless(entries):
     leaves, treedef = jax.tree_util.tree_flatten(cal)
     assert jax.tree_util.tree_unflatten(treedef, leaves) == cal
     assert Calibration.from_dict(json.loads(json.dumps(cal.to_dict()))) == cal
+
+
+# ---------------------------------------------------------------------------
+# shadow refresh (runtime.drift): the hot-swap algebra
+# ---------------------------------------------------------------------------
+
+from repro.runtime.drift import DriftThresholds, detect_drift, \
+    refreshed_calibration  # noqa: E402
+
+_DRIFT_SITES = ["attn.wq", "attn.wo", "mlp.wi", "mlp.wo", "lm_head", "*"]
+_stats_strategy = st.tuples(
+    *(st.floats(1e-6, 1e6, allow_nan=False) for _ in range(3)))
+
+
+def _cal_of(entries):
+    return Calibration(tuple(
+        (name, SiteStats(*vals)) for name, vals in entries.items()))
+
+
+@given(seeds=_batches_strategy(), order_seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_shadow_refresh_batch_order_invariant(seeds, order_seed):
+    """The hot-swappable refreshed calibration is independent of the order
+    in which live chunks were shadow-sampled (running maxima all the way
+    down), so serving schedule cannot leak into the swapped ranges."""
+    frozen = _cal_of({"mlp.wi": (0.5, 0.5, 0.5), "*": (1.0, 1.0, 1.0)})
+    shuffled = list(seeds)
+    np.random.default_rng(order_seed).shuffle(shuffled)
+    a, b = CalibrationRecorder(), CalibrationRecorder()
+    _observe_all(a, seeds)
+    _observe_all(b, shuffled)
+    assert refreshed_calibration(frozen, a.finalize()) == \
+        refreshed_calibration(frozen, b.finalize())
+
+
+@given(
+    frozen=st.dictionaries(st.sampled_from(_DRIFT_SITES), _stats_strategy,
+                           min_size=1, max_size=6),
+    observed=st.dictionaries(st.sampled_from(_DRIFT_SITES), _stats_strategy,
+                             min_size=1, max_size=6),
+)
+@settings(max_examples=50, deadline=None)
+def test_refreshed_calibration_treedef_preserving_and_monotone(
+        frozen, observed):
+    """Swap-safety invariants for ANY frozen/observed pair: the refreshed
+    calibration carries exactly the frozen site names (same pytree treedef,
+    so compiled executables are re-used) and never shrinks a range."""
+    f, o = _cal_of(frozen), _cal_of(observed)
+    r = refreshed_calibration(f, o)
+    assert r.site_names() == f.site_names()
+    _, td_f = jax.tree_util.tree_flatten(f)
+    _, td_r = jax.tree_util.tree_flatten(r)
+    assert td_f == td_r
+    for name, st_f in f.sites:
+        st_r = r.get(name)
+        assert st_r.x_max >= st_f.x_max
+        assert st_r.w_max >= st_f.w_max
+        assert st_r.sigma_yo >= st_f.sigma_yo
+
+
+@given(
+    frozen=st.dictionaries(st.sampled_from(_DRIFT_SITES), _stats_strategy,
+                           min_size=1, max_size=6),
+    observed=st.dictionaries(st.sampled_from(_DRIFT_SITES), _stats_strategy,
+                             min_size=1, max_size=6),
+)
+@settings(max_examples=50, deadline=None)
+def test_swap_then_recheck_never_reflags(frozen, observed):
+    """Convergence of the detect->swap loop: after refreshing with the very
+    observations that flagged drift, re-running the detector on those same
+    observations finds NO range excess even at a zero threshold (the
+    one-sided test is consistent with the merge)."""
+    f, o = _cal_of(frozen), _cal_of(observed)
+    r = refreshed_calibration(f, o)
+    rep = detect_drift(r, o, DriftThresholds(rel_excess=0.0, clip_rate=1.0))
+    assert not rep.drifted
+    assert all(e.rel_excess == 0.0 for e in rep.entries)

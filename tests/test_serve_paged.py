@@ -317,26 +317,37 @@ def test_tight_pool_defers_admission_and_reuses_blocks():
         assert r.out == ref, (r.rid, r.out, ref)
 
 
-def test_oversized_request_raises():
+def test_oversized_request_fails_gracefully():
+    """An oversized request retires with a per-request error status (never a
+    hard raise): the engine and every other request keep serving."""
     cfg = DENSE
     engine = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=16,
                     max_chunk=4)
     big = Request(rid=0, prompt=np.zeros(14, np.int64), max_new=8)
-    with pytest.raises(ValueError):
-        engine.admit_pending([big])
-    # an idle engine that can never admit must not spin forever
+    assert engine.admit_pending([big]) == []
+    assert big.done and big.error is not None and "cache_len" in big.error
+    assert engine.finished == [big]
+    assert engine.failed_requests == 1
+    # an idle engine that can never admit must not spin forever: the stuck
+    # head retires with an error and serving continues for the rest
     small_pool = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=32,
-                        max_chunk=4, kv_blocks=2)
-    with pytest.raises(ValueError):
-        serve(small_pool, [Request(rid=1, prompt=np.zeros(20, np.int64),
-                                   max_new=4)])
+                        max_chunk=4, kv_blocks=3)
+    stuck = Request(rid=1, prompt=np.zeros(20, np.int64), max_new=4)
+    rnp = np.random.default_rng(21)
+    fine = Request(rid=2, prompt=rnp.integers(0, cfg.vocab_size, 6),
+                   max_new=4)
+    out = serve(small_pool, [stuck, fine])
+    assert stuck in out and stuck.error is not None
+    assert fine in out and fine.error is None
+    assert fine.out == _greedy_sequential(cfg, fine.prompt, 4)
+    assert small_pool.alloc.used_count == 0
 
 
 def test_oversized_group_member_does_not_leak_blocks():
     """An oversized request BEHIND a valid same-bucket head must not join the
     group (it would blow past max_blocks mid-insert): the head admits
-    cleanly, the oversized one raises only once it reaches the head, and no
-    blocks leak along the way."""
+    cleanly, the oversized one retires with an error status only once it
+    reaches the head, and no blocks leak along the way."""
     cfg = DENSE
     engine = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=16,
                     max_chunk=4)
@@ -346,11 +357,12 @@ def test_oversized_group_member_does_not_leak_blocks():
                   max_new=64)  # same bucket (8), needs blocks > max_blocks
     pending = [ok, big]
     # the head admits cleanly; the oversized request then reaches the head
-    # within the same call and raises - AFTER the group insert, never mid-
-    # insert, so engine state stays consistent
-    with pytest.raises(ValueError):
-        engine.admit_pending(pending)
-    assert pending == [big]  # ok admitted and dequeued before the raise
+    # within the same call and retires with an error - AFTER the group
+    # insert, never mid-insert, so engine state stays consistent
+    admitted = engine.admit_pending(pending)
+    assert admitted == [ok]
+    assert pending == []  # big dequeued with an error status, not stuck
+    assert big.done and big.error is not None
     assert engine.active == 1
     assert engine.alloc.used_count == engine._blocks_needed(ok)
     out = serve(engine, [])
