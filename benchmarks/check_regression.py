@@ -23,11 +23,14 @@ A baseline record missing from the current run is a failure (a silently
 dropped bench is exactly the "stale artifact" failure mode this gate
 exists for); extra current records are allowed (new benches land first).
 
-Bench schema v2.2: serve-suite records must carry a ``substrate`` field
-naming the Substrate they ran on / billed (since v2.1), and ``serve_drift``
+Bench schema v2.3: serve-suite records must carry a ``substrate`` field
+naming the Substrate they ran on / billed (since v2.1), ``serve_drift``
 records must carry the full drift-report surface (detection, swap and
-recovery fields - new in v2.2); :func:`validate_schema` fails either side
-of a pair with a clear message when any of it is missing.
+recovery fields - since v2.2), and ``serve_slo`` records must carry the
+overload scoreboard (goodput, latency percentiles, shed/preempt/degrade
+counters, engine_deaths, conservation - new in v2.3);
+:func:`validate_schema` fails either side of a pair with a clear message
+when any of it is missing.
 """
 from __future__ import annotations
 
@@ -43,6 +46,8 @@ ID_FIELDS = (
     "slots", "requests", "gen", "prompt_len", "prompt_lens",
     "B", "K", "M", "bx", "bw", "rows", "bank_rows", "n", "n_banks",
     "snr_t_target_db", "snr_low_db", "snr_high_db", "inject_scale",
+    "policy", "alloc", "degrade", "workload_seed", "overload", "arrival",
+    "kv_blocks",
 )
 
 # bench schema v2.1: every serve-suite record must name the execution
@@ -150,6 +155,39 @@ RULES: Dict[str, Tuple[str, float]] = {
     "degradation_db_max": ("rel", 0.05),
     "recovery_gap_db_max": ("max_abs", 1.0),
     "failed_requests": ("exact", 0.0),
+    # SLO overload scenario (schema v2.3): virtual-clocked, so every metric
+    # is a deterministic function of the committed workload seed - counters
+    # gate exactly, latency/goodput floats get numeric-jitter tolerance.
+    # The absolute rules ARE the acceptance invariants: the resilient stack
+    # beats the FIFO+reserve baseline on goodput (ratio floor > 1), lazy
+    # allocation raises pool utilization (gain floor), and overload NEVER
+    # kills the engine (deaths ceiling 0)
+    "completed": ("exact", 0.0),
+    "shed": ("exact", 0.0),
+    "errored": ("exact", 0.0),
+    "ttft_miss": ("exact", 0.0),
+    "itl_miss": ("exact", 0.0),
+    "slo_met": ("exact", 0.0),
+    "preemptions": ("exact", 0.0),
+    "preempt_count": ("exact", 0.0),
+    "substrate_swaps": ("exact", 0.0),
+    "degrade_steps": ("exact", 0.0),
+    "upgrade_steps": ("exact", 0.0),
+    "shed_total": ("exact", 0.0),
+    "elapsed_steps": ("rel", 0.01),
+    "goodput": ("rel", 0.01),
+    "goodput_tokens": ("rel", 0.01),
+    "goodput_baseline": ("rel", 0.01),
+    "goodput_resilient": ("rel", 0.01),
+    "ttft_p50": ("rel", 0.01),
+    "ttft_p99": ("rel", 0.01),
+    "itl_p50": ("rel", 0.01),
+    "itl_p99": ("rel", 0.01),
+    "pool_utilization": ("rel", 0.01),
+    "goodput_ratio": ("min_abs", 1.001),
+    "pool_util_gain": ("min_abs", 0.01),
+    "engine_deaths": ("max_abs", 0.0),
+    "conserved": ("exact_str", 0.0),
 }
 
 # drift records must carry the full report surface: a record that says
@@ -158,6 +196,18 @@ DRIFT_REQUIRED_FIELDS = (
     "substrate", "drift_detected", "chunks_to_detect",
     "detection_bound_chunks", "swaps", "sites_drifted",
     "recovery_gap_db_max", "failed_requests",
+)
+
+# serve_slo records must carry the overload scoreboard (schema v2.3): a
+# record without these cannot express the overload acceptance invariants
+SLO_REQUIRED_FIELDS = (
+    "substrate", "policy", "alloc", "workload_seed", "overload", "goodput",
+    "slo_met", "shed", "preempt_count", "pool_utilization", "engine_deaths",
+    "conserved",
+)
+SLO_SUMMARY_REQUIRED_FIELDS = (
+    "substrate", "workload_seed", "goodput_ratio", "pool_util_gain",
+    "preempt_count", "engine_deaths", "conserved",
 )
 
 
@@ -216,7 +266,7 @@ def compare_metric(name: str, base, cur) -> str:
 
 
 def validate_schema(payload: dict, label: str) -> List[str]:
-    """Bench-schema v2.2 structural checks (run on BOTH sides of a pair: a
+    """Bench-schema v2.3 structural checks (run on BOTH sides of a pair: a
     stale committed baseline must fail just as loudly as a bad CI run)."""
     failures: List[str] = []
     for suite, body in payload.get("suites", {}).items():
@@ -241,6 +291,16 @@ def validate_schema(payload: dict, label: str) -> List[str]:
                         f"{missing} (required since bench schema v2.2: a "
                         f"drift record must carry the full detection/swap/"
                         f"recovery report surface)")
+            required = {"serve_slo": SLO_REQUIRED_FIELDS,
+                        "serve_slo_summary": SLO_SUMMARY_REQUIRED_FIELDS}
+            if bench in required:
+                missing = [f for f in required[bench] if f not in rec]
+                if missing:
+                    failures.append(
+                        f"{label}: {bench} record {ident} is missing "
+                        f"{missing} (required since bench schema v2.3: an "
+                        f"SLO record must carry the full overload "
+                        f"scoreboard)")
     return failures
 
 

@@ -34,6 +34,11 @@ def main() -> None:
                          "serve_energy,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write a machine-readable JSON report")
+    ap.add_argument("--workload-seed", type=int, default=None,
+                    help="override the serve_slo overload-workload seed "
+                         "(default: the committed baseline seed; every "
+                         "serve_slo field is a deterministic draw-for-draw "
+                         "function of this seed - no wall clock)")
     args = ap.parse_args()
     if args.json:
         json_dir = os.path.dirname(os.path.abspath(args.json)) or "."
@@ -44,6 +49,9 @@ def main() -> None:
 
     from benchmarks import kernel_bench, layer_snr, model_energy, roofline, serve_bench
     from benchmarks.paper_figures import ALL as FIG_BENCHES
+
+    if args.workload_seed is not None:
+        serve_bench.SLO_SEED = args.workload_seed
 
     suites = {}
     suites.update(FIG_BENCHES)
@@ -71,13 +79,16 @@ def main() -> None:
         # the serve bench surface reports energy too: selecting the serve
         # suite pulls in the (memoized, deterministic) serve_energy rollup
         only.add("serve_energy")
-    # schema v2.2: serve-suite records name the execution substrate they
-    # ran/billed (since v2.1) and serve_drift records carry the full
-    # detection/swap/recovery report surface (both enforced by
+    # schema v2.3: serve-suite records name the execution substrate they
+    # ran/billed (since v2.1), serve_drift records carry the full
+    # detection/swap/recovery report surface (since v2.2), and serve_slo
+    # records carry the overload scoreboard - goodput, TTFT/ITL percentiles,
+    # shed/preempt/degrade counters, engine_deaths, conservation - for the
+    # committed seeded 2x-overload scenario (all enforced by
     # check_regression.py)
     payload = {
-        "schema": "repro-imc-bench/v2.2",
-        "schema_version": 2.2,
+        "schema": "repro-imc-bench/v2.3",
+        "schema_version": 2.3,
         "backend": jax.default_backend(),
         # machine/XLA provenance: lets the regression gate (and humans) tell
         # a real perf change from a toolchain change, and the schema test

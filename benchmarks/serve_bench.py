@@ -563,6 +563,138 @@ def bench_records() -> List[dict]:
                     "requests": REQUESTS, "prompt_len": PROMPT_LEN,
                     "gen": GEN, **wave})
     records.extend(drift_records())
+    records.extend(slo_records())
+    return records
+
+
+# ---------------------------------------------------------------------------
+# SLO overload scenario (scheduling + preemption + frontier degradation)
+# ---------------------------------------------------------------------------
+
+# the committed overload scenario: a seeded bursty workload offered at 2x the
+# engine's service rate, on the frozen imc_analytic substrate at the QR
+# high-SNR frontier point (ladder level 0 for the PressureController).  Every
+# gated field is a deterministic function of (seed, overload, kv_blocks):
+# time is virtual (runtime.workload.VirtualClock), so no wall clock leaks
+# into the record.
+SLO_SEED = 0
+SLO_REQUESTS = 32
+SLO_OVERLOAD = 2.0
+SLO_ARRIVAL = "bursty"
+# 10 usable blocks for 4 slots: tight enough that lazy growth must preempt
+# under the burst, ample enough that worst-case reservation still admits
+SLO_KV_BLOCKS = 11
+SLO_RUNS = (
+    # (config id, policy, alloc, degrade): A = status-quo baseline,
+    # B = the full overload-resilience stack, C = isolates the lazy-alloc
+    # utilization win from scheduling effects
+    ("fifo_reserve", "fifo", "reserve", False),
+    ("deadline_lazy_degrade", "deadline", "lazy", True),
+    ("fifo_lazy", "fifo", "lazy", False),
+)
+
+
+def _slo_frozen():
+    """Frozen imc_analytic smoke engine config at the committed QR frontier
+    point (same freeze recipe as drift_records: rng(1) reference batch)."""
+    from repro.core.substrate import calibrate_model
+
+    pt = optimize(n=ENERGY_N, snr_t_target_db=ENERGY_SNR_HIGH, kinds=("qr",))
+    cfg = configs.get_smoke(ARCH).replace(imc=substrate_for_design(pt))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ref = np.random.default_rng(1).integers(0, cfg.vocab_size, (2, 24))
+    return pt, calibrate_model(cfg, params, [ref]), params
+
+
+def slo_records(seed: Optional[int] = None) -> List[dict]:
+    """Goodput / latency / shed / preempt / degrade scoreboard for the three
+    committed runs on identical seeded 2x-overload bursty traffic.
+
+    The acceptance invariants (gated in ``check_regression`` and pinned by
+    ``test_bench_schema``): the full stack (B) achieves strictly higher
+    goodput than the FIFO+reserve baseline (A) with zero engine deaths and
+    exact request conservation; lazy allocation alone (C) raises pool
+    utilization over worst-case reservation (A)."""
+    from repro.core.substrate import substrate_ladder
+    from repro.launch.metering import slo_summary
+    from repro.launch.scheduler import PressureController, make_policy
+    from repro.launch.serve import serve_slo
+    from repro.runtime.workload import (
+        VirtualClock,
+        generate,
+        make_overload_config,
+    )
+
+    if seed is None:
+        seed = SLO_SEED  # resolved late: run.py --workload-seed overrides
+    pt, cfg, params = _slo_frozen()
+    wcfg = make_overload_config(
+        n_requests=SLO_REQUESTS, seed=seed, overload=SLO_OVERLOAD,
+        slots=BATCH, max_new=GEN, arrival=SLO_ARRIVAL)
+    records: List[dict] = []
+    by_config: Dict[str, dict] = {}
+    for config, policy_name, alloc, degrade in SLO_RUNS:
+        reqs = generate(wcfg, cfg.vocab_size)
+        engine = Engine(cfg, params, BATCH, 32 + GEN + 8, max_chunk=4,
+                        kv_blocks=SLO_KV_BLOCKS, alloc_policy=alloc,
+                        clock=VirtualClock())
+        controller = (PressureController(engine,
+                                         substrate_ladder(pt, steps=2))
+                      if degrade else None)
+        policy = make_policy(policy_name)
+        deaths = 0
+        try:
+            finished = serve_slo(engine, reqs, policy=policy,
+                                 controller=controller)
+        except Exception:  # an engine death is a GATED failure, not a crash
+            deaths = 1
+            finished = engine.finished
+        conserved = (len(finished) == SLO_REQUESTS and sorted(
+            r.rid for r in finished) == list(range(SLO_REQUESTS)))
+        summary = slo_summary(finished, elapsed=engine.clock.now,
+                              policy=policy.name)
+        rec = {
+            "bench": "serve_slo", "arch": ARCH, "mode": "imc_analytic",
+            "substrate": "imc_analytic", "config": config,
+            "policy": policy.name, "alloc": alloc, "degrade": degrade,
+            "workload_seed": seed, "overload": SLO_OVERLOAD,
+            "arrival": SLO_ARRIVAL, "slots": BATCH,
+            "requests": SLO_REQUESTS, "gen": GEN,
+            "kv_blocks": SLO_KV_BLOCKS,
+            **{k: (round(v, 4) if isinstance(v, float) else v)
+               for k, v in summary.items() if k != "policy"},
+            "preempt_count": engine.preempt_count,
+            "substrate_swaps": engine.substrate_swaps,
+            "degrade_steps": (controller.degrade_steps if controller else 0),
+            "upgrade_steps": (controller.upgrade_steps if controller else 0),
+            "pool_utilization": round(engine.pool_utilization(), 4),
+            "engine_deaths": deaths,
+            "conserved": conserved,
+        }
+        records.append(rec)
+        by_config[config] = rec
+    a = by_config["fifo_reserve"]
+    b = by_config["deadline_lazy_degrade"]
+    c = by_config["fifo_lazy"]
+    records.append({
+        "bench": "serve_slo_summary", "arch": ARCH, "mode": "imc_analytic",
+        "substrate": "imc_analytic", "config": "overload_2x",
+        "workload_seed": seed, "overload": SLO_OVERLOAD,
+        "requests": SLO_REQUESTS, "slots": BATCH,
+        "goodput_ratio": round(b["goodput"] / a["goodput"], 4)
+        if a["goodput"] else float("nan"),
+        "goodput_baseline": a["goodput"],
+        "goodput_resilient": b["goodput"],
+        "pool_util_gain": round(
+            c["pool_utilization"] - a["pool_utilization"], 4),
+        "preempt_count": b["preempt_count"],
+        "degrade_steps": b["degrade_steps"],
+        "shed_total": a["shed"] + b["shed"] + c["shed"],
+        "engine_deaths": (a["engine_deaths"] + b["engine_deaths"]
+                          + c["engine_deaths"]),
+        "conserved": bool(a["conserved"] and b["conserved"]
+                          and c["conserved"]),
+    })
     return records
 
 
@@ -835,6 +967,27 @@ def rows_from_records(records: List[dict]) -> List[Row]:
                 f"(bound {r['detection_bound_chunks']}) "
                 f"swaps={r['swaps']} sites_drifted={r['sites_drifted']} "
                 f"degradation={r['degradation_db_max']}dB",
+            ))
+        elif r["bench"] == "serve_slo":
+            rows.append((
+                f"serve/slo_{r['config']}_{tag}",
+                r["goodput"],
+                f"SLO-met req/step @{r['overload']}x {r['arrival']} "
+                f"seed={r['workload_seed']}; met={r['slo_met']}/"
+                f"{r['requests']} shed={r['shed']} "
+                f"preempt={r['preempt_count']} "
+                f"degrade={r['degrade_steps']} "
+                f"ttft_p99={r['ttft_p99']} pool_util="
+                f"{r['pool_utilization']} deaths={r['engine_deaths']}",
+            ))
+        elif r["bench"] == "serve_slo_summary":
+            rows.append((
+                f"serve/slo_summary_{tag}",
+                r["goodput_ratio"],
+                f"goodput ratio (deadline+lazy+degrade / fifo+reserve) "
+                f"@{r['overload']}x overload; pool_util_gain="
+                f"{r['pool_util_gain']} preempt={r['preempt_count']} "
+                f"deaths={r['engine_deaths']} conserved={r['conserved']}",
             ))
         else:
             kv = r.get("kv_bytes_per_active_token")

@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Iterable, Optional
+from typing import Iterable, List, Optional
 
 import numpy as np
 
@@ -174,6 +174,27 @@ def with_b_adc(pt: DesignPoint, b_adc: int,
         delay_per_dp=delay,
         edp=energy * delay,
     )
+
+
+def frontier_ladder(pt: DesignPoint, steps: int = 2, min_b_adc: int = 2,
+                    stats: SignalStats = UNIFORM_STATS) -> List[DesignPoint]:
+    """Design points stepping DOWN the EDAP frontier from ``pt`` by lowering
+    the output-ADC precision one bit at a time (:func:`with_b_adc`): each
+    step trades SNR_T for lower energy AND delay per DP while the analog
+    core (kind, knob, banking) stays put.  Index 0 is ``pt`` itself; the
+    list is the load-shedding-by-accuracy axis the serve engine's
+    ``PressureController`` walks under overload (the workload-matched ADC
+    precision argument of arxiv 2507.09776 / 2408.06390)."""
+    if steps < 0:
+        raise ValueError("steps must be >= 0")
+    ladder = [pt]
+    b = pt.b_adc
+    for _ in range(steps):
+        b -= 1
+        if b < min_b_adc:
+            break
+        ladder.append(with_b_adc(pt, b, stats))
+    return ladder
 
 
 # ---------------------------------------------------------------------------

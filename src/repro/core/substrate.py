@@ -351,6 +351,18 @@ class Substrate:
         """The execution-mode name (the string the old flag plumbing used)."""
         return self.imc.mode
 
+    @property
+    def trace_key(self):
+        """Hashable identity of the TRACED computation this substrate builds:
+        kernel knobs, calibration policy and per-site overrides.  The
+        calibration VALUES are excluded - they enter jitted functions as a
+        traced runtime argument (the hot-swap contract), so two frozen
+        substrates differing only in calibration share every compiled
+        executable.  The serve engine keys its prefill/decode jit caches on
+        this, which is what makes frontier-ladder substrate swaps compile
+        once per level instead of storming."""
+        return (self.imc, self.policy, self.overrides)
+
     # -- per-site resolution -------------------------------------------------
     def _override_for(self, site: Optional[str]) -> Optional[SiteOverride]:
         if not self.overrides:
@@ -528,6 +540,20 @@ def substrate_for_design(pt: DesignPoint, **kw) -> Substrate:
                             rows=pt.n_bank, v_wl=pt.knob, design=pt, **kw)
     return AnalyticIMC(bx=pt.bx, bw=pt.bw, b_adc=pt.b_adc,
                        snr_a_db=pt.snr_a_db, design=pt, **kw)
+
+
+def substrate_ladder(pt: DesignPoint, steps: int = 2, min_b_adc: int = 2,
+                     **kw) -> List[Substrate]:
+    """Executable substrates stepping DOWN the EDAP frontier from ``pt``
+    (``core.design.frontier_ladder``): index 0 is the committed design point,
+    each later entry trades SNR_T for lower energy/delay per DP by dropping
+    one bit of output-ADC precision.  This is the degradation axis the
+    ``launch.scheduler.PressureController`` walks under overload; every
+    entry carries its design point for billing."""
+    from repro.core.design import frontier_ladder
+
+    return [substrate_for_design(p, **kw)
+            for p in frontier_ladder(pt, steps=steps, min_b_adc=min_b_adc)]
 
 
 # ---------------------------------------------------------------------------

@@ -88,6 +88,10 @@ class DPMeter:
         self.calibration_swaps = 0
         self.failed_requests = 0
         self.drift_reports: List[dict] = []
+        # overload-resilience counters (same O(1) host-side contract)
+        self.shed_requests = 0
+        self.preemptions = 0
+        self.substrate_swaps = 0
 
     # -- engine hook points ---------------------------------------------------
     def note_shadow_sample(self):
@@ -109,6 +113,22 @@ class DPMeter:
     def note_request_failure(self):
         """One request retired with a per-request error status."""
         self.failed_requests += 1
+
+    def note_shed(self):
+        """The scheduler shed one request (typed per-request status)."""
+        self.shed_requests += 1
+
+    def note_preemption(self):
+        """One mid-generation recompute-preemption (blocks freed, request
+        re-queued with its generated tokens)."""
+        self.preemptions += 1
+
+    def note_substrate_swap(self, substrate: Optional[Substrate] = None):
+        """The engine hot-swapped its execution substrate (frontier
+        degradation step).  Energy rollups keep billing the substrate stamped
+        on the meter - a mixed-level workload is billed at whichever level
+        the report reads, which the serve_slo record states explicitly."""
+        self.substrate_swaps += 1
 
     def drift_summary(self) -> Optional[dict]:
         """Structured rollup of the online-calibration activity this meter
@@ -351,6 +371,120 @@ def serve_energy_report(
         substrate=substrate,
         drift=meter.drift_summary(),
     )
+
+
+# ---------------------------------------------------------------------------
+# SLO rollup: per-request timing -> p50/p99 TTFT & inter-token latency,
+# deadline misses and goodput (virtual-clock serve loops; deterministic)
+# ---------------------------------------------------------------------------
+
+
+def percentile(values: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile (deterministic, no interpolation): the
+    smallest element >= p percent of the sample.  NaN on empty input."""
+    if not values:
+        return float("nan")
+    xs = sorted(values)
+    rank = max(1, math.ceil(p / 100.0 * len(xs)))
+    return float(xs[rank - 1])
+
+
+def request_ttft(req) -> Optional[float]:
+    """Arrival -> first token (falls back to submit time when the request
+    carries no arrival timestamp)."""
+    if req.t_first is None:
+        return None
+    start = req.arrive_at if req.arrive_at is not None else req.t_submit
+    if start is None:
+        return None
+    return req.t_first - start
+
+
+def request_itl_gaps(req) -> List[float]:
+    """Gaps between consecutive generated tokens (virtual-clock runs only).
+    Spans preemptions: a re-queued request's wait shows up as a large gap,
+    which is exactly what its consumer would experience."""
+    ts = req.token_times
+    return [ts[i + 1] - ts[i] for i in range(len(ts) - 1)]
+
+
+def slo_summary(requests, elapsed: float, policy: str = "") -> dict:
+    """Roll a finished SLO workload up to the scheduling scoreboard.
+
+    A request MEETS its SLO iff it completed without error, its TTFT is
+    within ``ttft_deadline`` and no inter-token gap exceeds
+    ``itl_deadline`` (absent deadlines always pass).  ``goodput`` is
+    SLO-met requests per virtual step and ``goodput_tokens`` their tokens
+    per virtual step - the overload currency: shedding a hopeless request
+    costs completed-count but buys goodput."""
+    ttfts: List[float] = []
+    gaps: List[float] = []
+    completed = shed = errored = ttft_miss = itl_miss = slo_met = 0
+    slo_tokens = 0
+    preemptions = 0
+    for r in requests:
+        preemptions += r.preemptions
+        if getattr(r, "shed", False):
+            shed += 1
+            continue
+        if r.error is not None:
+            errored += 1
+            continue
+        completed += 1
+        ttft = request_ttft(r)
+        if ttft is not None:
+            ttfts.append(ttft)
+        r_gaps = request_itl_gaps(r)
+        gaps.extend(r_gaps)
+        miss = False
+        if r.ttft_deadline is not None and (ttft is None
+                                            or ttft > r.ttft_deadline):
+            ttft_miss += 1
+            miss = True
+        if r.itl_deadline is not None and any(g > r.itl_deadline
+                                              for g in r_gaps):
+            itl_miss += 1
+            miss = True
+        if not miss:
+            slo_met += 1
+            slo_tokens += len(r.out)
+    elapsed = max(elapsed, 1e-9)
+    return {
+        "policy": policy,
+        "requests": len(requests),
+        "completed": completed,
+        "shed": shed,
+        "errored": errored,
+        "ttft_miss": ttft_miss,
+        "itl_miss": itl_miss,
+        "slo_met": slo_met,
+        "preemptions": preemptions,
+        "elapsed_steps": round(elapsed, 3),
+        "goodput": slo_met / elapsed,
+        "goodput_tokens": slo_tokens / elapsed,
+        "ttft_p50": percentile(ttfts, 50),
+        "ttft_p99": percentile(ttfts, 99),
+        "itl_p50": percentile(gaps, 50),
+        "itl_p99": percentile(gaps, 99),
+    }
+
+
+def format_slo_summary(summary: dict) -> str:
+    keys = ["requests", "completed", "shed", "errored", "ttft_miss",
+            "itl_miss", "slo_met", "preemptions", "elapsed_steps",
+            "goodput", "goodput_tokens", "ttft_p50", "ttft_p99", "itl_p50",
+            "itl_p99"]
+    lines = []
+    for k in keys:
+        v = summary.get(k)
+        lines.append(f"  {k:>16s} = "
+                     + (f"{v:.4f}" if isinstance(v, float) else str(v)))
+    for k, v in summary.items():
+        if k in keys or k == "policy":
+            continue
+        lines.append(f"  {k:>16s} = "
+                     + (f"{v:.4f}" if isinstance(v, float) else str(v)))
+    return "\n".join(lines)
 
 
 def format_report(reports: Sequence[EnergyReport]) -> str:

@@ -79,6 +79,50 @@ Robustness (drift + faults):
                        transient ``XlaRuntimeError`` on a decode chunk is
                        retried once (the ``runtime.fault`` retry idiom) and,
                        if it persists, fails only the requests in flight.
+
+Overload resilience (scheduling + preemption contract):
+
+  lazy paged blocks    under ``alloc_policy="lazy"`` (the default) admission
+                       allocates only the blocks the prompt insert needs
+                       (``ceil(len(prompt)/block)``); generation-tail blocks
+                       are allocated ON the block-boundary crossing, right
+                       before each decode chunk (``_ensure_blocks``), so the
+                       early-stopping mix no longer pays worst-case
+                       reservation.  ``alloc_policy="reserve"`` keeps the old
+                       worst-case behaviour.  Feasibility (``_fits``) still
+                       checks the worst case, so a solo request can always
+                       finish once the pool drains.
+  recompute-preempt    a mid-generation allocation failure preempts a VICTIM
+                       (the latest-admitted active slot newer than the
+                       grower; the grower itself if none is newer - the
+                       oldest resident always progresses, so the scheme
+                       cannot livelock): its blocks are freed and it joins
+                       ``engine.preempted`` keeping its generated tokens.
+                       Serve loops re-queue it; re-admission prefills
+                       ``prompt + out`` (the resume prompt), whose final
+                       argmax IS the next token decode would have produced -
+                       under frozen calibration the resumed request is
+                       bit-exact with its uninterrupted counterpart
+                       (test-pinned on all three substrates).  Preemption
+                       never kills the engine and never loses a request.
+  scheduler policies   ``serve_slo`` drives the engine under a
+                       ``launch.scheduler`` policy object (FIFO /
+                       shortest-prompt-first / SLO-deadline with load
+                       shedding); shed requests retire through
+                       ``fail_request`` with ``error_kind="shed"`` (PR 6's
+                       graceful per-request contract - never engine death).
+                       Time is virtual (``runtime.workload.VirtualClock``,
+                       decode-step units), so every SLO metric is a
+                       deterministic function of the workload seed.
+  frontier degradation a ``scheduler.PressureController`` watches queue
+                       depth / pool occupancy and hot-swaps the substrate
+                       one step down the EDAP frontier
+                       (``Engine.swap_substrate``, jit caches keyed on
+                       ``Substrate.trace_key`` - one compile per ladder
+                       level, then pure pointer updates), stepping back up
+                       when pressure clears.  While the queue is saturated
+                       (``drift_pause_depth``), drift shadow sampling is
+                       paused so the callback tax never lands at peak load.
 """
 from __future__ import annotations
 
@@ -114,13 +158,54 @@ class Request:
     t_submit: Optional[float] = None
     t_first: Optional[float] = None  # first generated token on the host
     # per-request failure status: a request that cannot be served (oversized,
-    # poisoned prefill, persistent device error mid-decode) finishes with
-    # done=True and the reason here - failures never escape to the engine
+    # poisoned prefill, persistent device error mid-decode, shed under
+    # overload) finishes with done=True, the reason in ``error`` and a typed
+    # category in ``error_kind`` - failures never escape to the engine
     error: Optional[str] = None
+    error_kind: Optional[str] = None  # "admission"|"prefill"|"decode"|"shed"
+    # SLO workload metadata (runtime.workload): virtual arrival time,
+    # per-class deadlines (relative to arrival / between tokens), tenant
+    # class.  All None/default for plain offline serving.
+    arrive_at: Optional[float] = None
+    ttft_deadline: Optional[float] = None
+    itl_deadline: Optional[float] = None
+    rclass: str = "default"
+    # true generation length (the EOS the engine cannot know at admission):
+    # generation stops at min(max_new, stop_at).  Worst-case reservation
+    # must still budget max_new blocks - that gap is the lazy-allocation win.
+    stop_at: Optional[int] = None
+    # recompute-preemption bookkeeping
+    preemptions: int = 0
+    # virtual completion time of each generated token (only stamped when the
+    # engine runs under a VirtualClock; feeds p50/p99 inter-token latency)
+    token_times: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def ok(self) -> bool:
         return self.done and self.error is None
+
+    @property
+    def shed(self) -> bool:
+        return self.error_kind == "shed"
+
+    @property
+    def effective_max(self) -> int:
+        """Tokens this request will actually generate (EOS-capped)."""
+        if self.stop_at is None:
+            return self.max_new
+        return min(self.max_new, self.stop_at)
+
+    @property
+    def full_prompt(self) -> np.ndarray:
+        """The resume prompt: original prompt plus every generated token.
+        Prefilling it reproduces the exact decode state - the final
+        position's argmax is the next token the uninterrupted run would
+        produce (bit-exact under frozen calibration)."""
+        if not self.out:
+            return self.prompt
+        return np.concatenate(
+            [np.asarray(self.prompt), np.asarray(self.out)]).astype(
+                np.asarray(self.prompt).dtype)
 
     @property
     def ttft(self) -> Optional[float]:
@@ -219,7 +304,9 @@ class Engine:
                  block_size: int = DEFAULT_BLOCK,
                  kv_blocks: Optional[int] = None, meter=None,
                  drift_monitor: Optional[drift_lib.DriftMonitor] = None,
-                 failure_injector: Optional[Callable[[str, Any], None]] = None):
+                 failure_injector: Optional[Callable[[str, Any], None]] = None,
+                 alloc_policy: str = "lazy", clock=None,
+                 drift_pause_depth: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         # the first-class execution substrate every matmul routes through
@@ -271,8 +358,30 @@ class Engine:
             kv_blocks = batch_slots * self.max_blocks + 1
         self.alloc = BlockAllocator(kv_blocks if self.has_paged else 1)
 
+        if alloc_policy not in ("lazy", "reserve"):
+            raise ValueError(f"unknown alloc_policy {alloc_policy!r}")
+        self.alloc_policy = alloc_policy
+        # optional runtime.workload.VirtualClock: when present, admission /
+        # decode advance it and stamp t_submit/t_first/token_times in virtual
+        # decode-step units (deterministic SLO metrics); None = wall clock
+        self.clock = clock
+        # drift shadow sampling pauses while queue_depth exceeds this
+        # (serve loops publish their queue length here each tick)
+        self.drift_pause_depth = drift_pause_depth
+        self.queue_depth = 0
+
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self._slot_blocks: List[List[int]] = [[] for _ in range(batch_slots)]
+        # host-side per-slot sequence depth (mirror of the device pos vector;
+        # drives lazy block-boundary math without a device read)
+        self._slot_pos: List[int] = [0] * batch_slots
+        # admission sequence number per slot: the preemption victim order
+        self._slot_seq: List[int] = [0] * batch_slots
+        self._admit_seq = 0
+        # recompute-preempted requests wait here for the serve loop to
+        # re-queue them (they keep their generated tokens - the resume
+        # prompt is prompt + out)
+        self.preempted: List[Request] = []
         cache = init_paged_cache(cfg, batch_slots, self.cache_len,
                                  kv_blocks if self.has_paged else 1,
                                  block_size)
@@ -291,14 +400,25 @@ class Engine:
         # robustness counters
         self.failed_requests = 0
         self.decode_failures = 0
+        self.shed_requests = 0
+        self.preempt_count = 0
+        self.substrate_swaps = 0
+        # pool-utilization accounting (sampled once per decode chunk):
+        # live tokens vs the token capacity of the blocks actually allocated
+        self._util_token_sum = 0
+        self._util_cap_sum = 0
 
-        # jit caches keyed (..., shadow): the shadow variant of a function is
-        # traced under shadow_recording and carries the observation
-        # callbacks; the calibration pytree is a traced ARGUMENT of both, so
-        # a hot-swap (same site names -> same treedef) re-uses every entry
-        self._prefill_fns: Dict[Tuple[int, int, bool], Any] = {}
-        self._decode_fns: Dict[Tuple[int, bool], Any] = {}
+        # jit caches keyed (..., shadow, substrate.trace_key): the shadow
+        # variant of a function is traced under shadow_recording and carries
+        # the observation callbacks; the calibration pytree is a traced
+        # ARGUMENT of both, so a calibration hot-swap (same site names ->
+        # same treedef) re-uses every entry, and a frontier-ladder substrate
+        # swap (different trace_key) compiles once per level then re-uses -
+        # no recompile storms on either axis
+        self._prefill_fns: Dict[Tuple[int, int, bool, Any], Any] = {}
+        self._decode_fns: Dict[Tuple[int, bool, Any], Any] = {}
         self._insert_fn = jax.jit(self._insert_impl)
+        self._extend_fn = jax.jit(self._extend_impl)
         self._block_bytes, self._fixed_kv_bytes = self._kv_accounting()
 
     # -- kv memory accounting --------------------------------------------------
@@ -337,6 +457,15 @@ class Engine:
         return sum(len(r.prompt) + len(r.out) for r in self.slots
                    if r is not None)
 
+    def pool_utilization(self) -> float:
+        """Chunk-averaged live tokens per allocated-block token capacity:
+        the fraction of reserved KV memory actually backing live tokens
+        (worst-case reservation scores low on early-stopping traffic; lazy
+        allocation is the fix)."""
+        if self._util_cap_sum == 0:
+            return 0.0
+        return self._util_token_sum / self._util_cap_sum
+
     # -- rng ------------------------------------------------------------------
     def _next_key(self):
         if self.rng is None:
@@ -344,47 +473,79 @@ class Engine:
         self.rng, key = jax.random.split(self.rng)
         return key
 
+    # -- time -----------------------------------------------------------------
+    def _now(self) -> float:
+        return self.clock.now if self.clock is not None else time.perf_counter()
+
     # -- admission ------------------------------------------------------------
     @property
     def active(self) -> int:
         return sum(1 for s in self.slots if s is not None)
 
     def _bucket(self, req: Request) -> int:
-        return prefill_bucket(len(req.prompt), self.bucketable, self.cache_len)
+        return prefill_bucket(len(req.full_prompt), self.bucketable,
+                              self.cache_len)
 
-    def _blocks_needed(self, req: Request) -> int:
+    def _total_positions(self, req: Request) -> int:
+        """WORST-CASE K/V positions the request may write over its whole
+        life: the original prompt plus a full ``max_new`` generation tail.
+        Deliberately ignores ``stop_at`` (the EOS is unknowable at
+        admission - budgeting on it would leak the oracle; early stopping
+        is exactly what lazy allocation profits from).  Invariant under
+        preemption: prompt + out + (max_new - out) - 1."""
+        return len(req.prompt) + req.max_new - 1
+
+    def _blocks_total(self, req: Request) -> int:
+        """Worst-case block demand (feasibility: can this EVER finish?)."""
         if not self.has_paged:
             return 0
-        # decode writes K/V at positions len .. len + max_new - 2
-        return -(-(len(req.prompt) + req.max_new - 1) // self.block)
+        return -(-self._total_positions(req) // self.block)
+
+    def _blocks_needed(self, req: Request) -> int:
+        """Blocks allocated AT ADMISSION.  Lazy: just the prompt-insert
+        coverage (ceil(len(full_prompt)/block)); generation-tail blocks
+        arrive later via ``_ensure_blocks``.  Reserve: the old worst case."""
+        if not self.has_paged:
+            return 0
+        if self.alloc_policy == "reserve":
+            return self._blocks_total(req)
+        return -(-len(req.full_prompt) // self.block)
 
     def _fits(self, req: Request) -> bool:
-        return (len(req.prompt) + req.max_new - 1 <= self.cache_len
-                and self._blocks_needed(req) <= self.alloc.num_blocks - 1)
+        return (self._total_positions(req) <= self.cache_len
+                and self._blocks_total(req) <= self.alloc.num_blocks - 1)
 
     def _admission_error(self, req: Request) -> Optional[str]:
         """Why ``req`` can NEVER be admitted (None if it can): the graceful
         replacement for the old hard ``ValueError`` - an oversized request
         retires with this as its per-request error status."""
         length = len(req.prompt)
-        if length + req.max_new - 1 > self.cache_len:
+        if self._total_positions(req) > self.cache_len:
             return (f"prompt ({length}) + max_new ({req.max_new}) exceeds "
                     f"cache_len ({self.cache_len})")
-        if self._blocks_needed(req) > self.alloc.num_blocks - 1:
-            return (f"request {req.rid} needs {self._blocks_needed(req)} KV "
+        if self._blocks_total(req) > self.alloc.num_blocks - 1:
+            return (f"request {req.rid} needs {self._blocks_total(req)} KV "
                     f"blocks; pool has {self.alloc.num_blocks - 1}")
         return None
 
-    def fail_request(self, req: Request, error: str):
+    def fail_request(self, req: Request, error: str,
+                     kind: str = "admission"):
         """Retire an unadmitted request with a per-request error status
-        (failure isolation: the engine and every other request keep going)."""
+        (failure isolation: the engine and every other request keep going).
+        ``kind`` types the failure ("admission" | "prefill" | "decode" |
+        "shed" - the scheduler's load-shedding path)."""
         req.done = True
         req.error = error
+        req.error_kind = kind
         self.finished.append(req)
         self.failed_requests += 1
+        if kind == "shed":
+            self.shed_requests += 1
+            if self.meter is not None:
+                self.meter.note_shed()
         if self.meter is not None:
             self.meter.note_request_failure()
-        log.warning("request %d failed: %s", req.rid, error)
+        log.warning("request %d failed (%s): %s", req.rid, kind, error)
 
     def admit(self, req: Request) -> bool:
         """Single-request admission (compat shim over the batched path)."""
@@ -441,7 +602,7 @@ class Engine:
         fails, its blocks are freed and each member retries SOLO, so a single
         poison request errors out alone instead of taking the group (or the
         engine) down with it."""
-        now = time.perf_counter()
+        now = self._now()
         r_real = len(group)
         r_pad = 1
         while r_pad < r_real:
@@ -455,20 +616,23 @@ class Engine:
         for r, req in enumerate(group):
             if req.t_submit is None:
                 req.t_submit = now
-            length = len(req.prompt)
-            toks[r, :length] = req.prompt
+            # the RESUME prompt: original prompt plus any tokens generated
+            # before a preemption (empty out = plain admission, unchanged)
+            pvec = req.full_prompt
+            length = len(pvec)
+            toks[r, :length] = pvec
             true_len[r] = length
             slot_vec[r] = slot_ids[r]
             blocks = self.alloc.alloc(self._blocks_needed(req))
             assert blocks is not None  # reserved in admit_pending
             self._slot_blocks[slot_ids[r]] = blocks
             bt_rows[r, : len(blocks)] = blocks
-        shadow = (self._drift is not None
+        shadow = (self._drift is not None and not self._drift_paused()
                   and self._drift.take_prefill_sample())
-        pf = self._prefill_fns.get((r_pad, bucket, shadow))
+        pf_key = (r_pad, bucket, shadow, self.substrate.trace_key)
+        pf = self._prefill_fns.get(pf_key)
         if pf is None:
-            pf = self._prefill_fns[(r_pad, bucket, shadow)] = \
-                self._make_prefill()
+            pf = self._prefill_fns[pf_key] = self._make_prefill()
         rids = tuple(r.rid for r in group)
 
         def run_pf():
@@ -496,7 +660,8 @@ class Engine:
                     self._slot_blocks[sid] = []
             if r_real == 1:
                 self.fail_request(
-                    group[0], f"prefill failed after retry: {e!r}")
+                    group[0], f"prefill failed after retry: {e!r}",
+                    kind="prefill")
                 return []
             log.warning("batched prefill of %d requests failed (%r); "
                         "re-admitting each solo to isolate the poison row",
@@ -520,13 +685,24 @@ class Engine:
             if shadow:
                 self.meter.note_shadow_sample()
         tok0_host = np.asarray(tok0)  # one sync per GROUP (TTFT for all rows)
-        t_first = time.perf_counter()
+        if self.clock is not None:
+            # batched prefill cost: one bucket's worth of token-forwards
+            # (rows run in parallel across the banks)
+            self.clock.advance(bucket * self.clock.prefill_token_cost)
+        t_first = self._now()
         for r, req in enumerate(group):
-            self.slots[slot_vec[r]] = req
+            sid = slot_vec[r]
+            self.slots[sid] = req
+            self._slot_pos[sid] = int(true_len[r])
+            self._slot_seq[sid] = self._admit_seq
+            self._admit_seq += 1
             req.out.append(int(tok0_host[r]))
-            req.t_first = t_first
-            if len(req.out) >= req.max_new:
-                self._retire(slot_vec[r])
+            if req.t_first is None:  # a resumed request keeps its real TTFT
+                req.t_first = t_first
+            if self.clock is not None:
+                req.token_times.append(t_first)
+            if len(req.out) >= req.effective_max:
+                self._retire(sid)
         return list(group)
 
     def _make_prefill(self):
@@ -618,13 +794,16 @@ class Engine:
             pos.at[slot_vec].set(true_len, mode="drop"),
         )
 
-    def _retire(self, i: int, error: Optional[str] = None):
+    def _retire(self, i: int, error: Optional[str] = None,
+                kind: str = "decode"):
         req = self.slots[i]
         req.done = True
         req.error = error
         self.slots[i] = None
+        self._slot_pos[i] = 0
         self.finished.append(req)
         if error is not None:
+            req.error_kind = kind
             self.failed_requests += 1
             if self.meter is not None:
                 self.meter.note_request_failure()
@@ -634,6 +813,117 @@ class Engine:
             # that is safe because inactive rows write to the garbage block
             self.alloc.free(self._slot_blocks[i])
             self._slot_blocks[i] = []
+
+    # -- lazy allocation + recompute-preemption --------------------------------
+    def _preempt(self, i: int):
+        """Evict slot ``i`` mid-generation: free its blocks and park the
+        request (with its generated tokens) on ``self.preempted`` for the
+        serve loop to re-queue.  Re-admission prefills prompt + out, which
+        reproduces the decode state exactly - recompute-preemption is
+        bit-exact under frozen calibration.  The stale device block table /
+        last-token row is safe for the same reason retirement is: inactive
+        rows write to the garbage block."""
+        req = self.slots[i]
+        self.slots[i] = None
+        self._slot_pos[i] = 0
+        req.preemptions += 1
+        if self._slot_blocks[i]:
+            self.alloc.free(self._slot_blocks[i])
+            self._slot_blocks[i] = []
+        self.preempted.append(req)
+        self.preempt_count += 1
+        if self.meter is not None:
+            self.meter.note_preemption()
+        log.info("preempted request %d from slot %d (%d tokens kept)",
+                 req.rid, i, len(req.out))
+
+    def _pick_victim(self, grower: int) -> Optional[int]:
+        """Victim slot for a failed block grow: the LATEST-admitted active
+        slot newer than the grower (None if the grower itself is newest).
+        Never preempting an older resident means the oldest one always makes
+        progress, so grow/preempt cycles terminate."""
+        candidates = [i for i, s in enumerate(self.slots)
+                      if s is not None and i != grower
+                      and self._slot_seq[i] > self._slot_seq[grower]]
+        if not candidates:
+            return None
+        return max(candidates, key=lambda i: self._slot_seq[i])
+
+    def _ensure_blocks(self, n_steps: int):
+        """Lazy allocation on block-boundary crossing: before a chunk of
+        ``n_steps`` decode writes, every active slot must own blocks covering
+        positions ``0 .. pos + n_steps - 1``.  Grows oldest-first; an
+        allocation failure preempts victims (``_pick_victim``) until the grow
+        fits or the grower itself is preempted.  New (slot, logical block,
+        physical block) entries are scattered into the device block tables in
+        ONE jitted call."""
+        if not self.has_paged or self.alloc_policy != "lazy":
+            return
+        triples: List[Tuple[int, int, int]] = []
+        order = sorted(
+            (i for i, s in enumerate(self.slots) if s is not None),
+            key=lambda i: self._slot_seq[i])
+        for i in order:
+            if self.slots[i] is None:
+                continue  # preempted as a victim earlier in this pass
+            need = -(-(self._slot_pos[i] + n_steps) // self.block)
+            deficit = need - len(self._slot_blocks[i])
+            if deficit <= 0:
+                continue
+            got = self.alloc.alloc(deficit)
+            while got is None:
+                victim = self._pick_victim(i)
+                if victim is None:
+                    # the grower is the newest resident: it yields (keeping
+                    # its tokens) rather than evicting older work
+                    self._preempt(i)
+                    break
+                self._preempt(victim)
+                got = self.alloc.alloc(deficit)
+            if got is None:
+                continue
+            have = len(self._slot_blocks[i])
+            triples.extend((i, have + j, b) for j, b in enumerate(got))
+            self._slot_blocks[i].extend(got)
+        if not triples:
+            return
+        # pad to a power of two (dropped via slot == batch_slots) so the
+        # jitted block-table extend compiles per size class, not per count
+        n_pad = 1
+        while n_pad < len(triples):
+            n_pad *= 2
+        slot_vec = np.full((n_pad,), self.batch_slots, np.int32)
+        log_vec = np.zeros((n_pad,), np.int32)
+        phys_vec = np.zeros((n_pad,), np.int32)
+        for j, (s, l, p) in enumerate(triples):
+            slot_vec[j], log_vec[j], phys_vec[j] = s, l, p
+        self.cache = self._extend_fn(
+            self.cache, jnp.asarray(slot_vec), jnp.asarray(log_vec),
+            jnp.asarray(phys_vec))
+
+    def _extend_impl(self, cache, slot_vec, log_vec, phys_vec):
+        """Scatter freshly-allocated physical block ids into every paged
+        layer group's block table at (slot, logical) - the device half of a
+        lazy grow.  Out-of-bounds slot ids (pad entries) drop."""
+
+        def walk(sub, stacked: bool):
+            if isinstance(sub, dict) and "pk" in sub:
+                out = dict(sub)
+                bt = sub["bt"]
+                if stacked:
+                    src = jnp.broadcast_to(
+                        phys_vec, (bt.shape[0],) + phys_vec.shape)
+                    out["bt"] = bt.at[:, slot_vec, log_vec].set(
+                        src, mode="drop")
+                else:
+                    out["bt"] = bt.at[slot_vec, log_vec].set(
+                        phys_vec, mode="drop")
+                return out
+            if isinstance(sub, dict):
+                return {k: walk(v, stacked) for k, v in sub.items()}
+            return sub
+
+        return {k: walk(v, k == "blocks") for k, v in cache.items()}
 
     # -- online calibration ----------------------------------------------------
     def swap_calibration(self, calibration: substrate_lib.Calibration):
@@ -666,6 +956,38 @@ class Engine:
             if self.meter.substrate is old:
                 self.meter.substrate = self.substrate
 
+    def swap_substrate(self, substrate, time_scale: float = 1.0):
+        """Hot-swap the execution substrate (load-adaptive frontier
+        degradation).  Call only between chunks - same atomicity contract as
+        ``swap_calibration``.  The engine's live frozen calibration (if any)
+        is re-attached to the incoming substrate, so site names - and with
+        them the calibration treedef - are preserved; the prefill/decode jit
+        caches are keyed on ``Substrate.trace_key``, so each distinct ladder
+        level compiles once and every later move to it is a host-side
+        pointer update.  ``time_scale`` is the new per-decode-step virtual
+        cost (a degraded design point's frontier delay ratio < 1)."""
+        sub = substrate_lib.as_substrate(substrate)
+        if self._calib is not None:
+            sub = sub.frozen(self._calib)
+        old = self.substrate
+        self.substrate = sub
+        self.cfg = self.cfg.replace(imc=sub)
+        self.substrate_swaps += 1
+        if self.clock is not None:
+            self.clock.time_scale = time_scale
+        if self.meter is not None:
+            self.meter.note_substrate_swap(sub)
+            if self.meter.substrate is old:
+                self.meter.substrate = sub
+
+    def _drift_paused(self) -> bool:
+        """Shadow sampling pauses while the serve loop reports a queue above
+        the pressure threshold: the cadence phase freezes (``take_sample`` is
+        simply not consulted) and resumes untouched when pressure clears, so
+        the DriftMonitor callback tax never lands at peak load."""
+        return (self.drift_pause_depth is not None
+                and self.queue_depth > self.drift_pause_depth)
+
     def _maybe_check_drift(self):
         """After a shadow-sampled chunk: run the detector at the monitor's
         cadence and hot-swap the refreshed calibration on a drifted report
@@ -685,8 +1007,11 @@ class Engine:
 
     # -- fused decode ----------------------------------------------------------
     def next_chunk(self) -> int:
-        """Largest power-of-two scan length no active request overruns."""
-        rem = [r.max_new - len(r.out) for r in self.slots if r is not None]
+        """Largest power-of-two scan length no active request overruns
+        (EOS-capped: an early-stopping request bounds the chunk at its true
+        remaining generation, not its worst-case cap)."""
+        rem = [r.effective_max - len(r.out) for r in self.slots
+               if r is not None]
         if not rem:
             return 0
         cap = min(min(rem), self.max_chunk)
@@ -735,12 +1060,17 @@ class Engine:
             n_steps = self.next_chunk()
         if n_steps <= 0:
             return np.zeros((self.batch_slots, 0), np.int32)
+        # lazy growth (may preempt: the active set below reflects it)
+        self._ensure_blocks(n_steps)
+        if self.active == 0:
+            return np.zeros((self.batch_slots, 0), np.int32)
         shadow = (self._drift is not None and self.active > 0
+                  and not self._drift_paused()
                   and self._drift.take_sample())
-        fn = self._decode_fns.get((n_steps, shadow))
+        fn_key = (n_steps, shadow, self.substrate.trace_key)
+        fn = self._decode_fns.get(fn_key)
         if fn is None:
-            fn = self._decode_fns[(n_steps, shadow)] = \
-                self._make_decode(n_steps)
+            fn = self._decode_fns[fn_key] = self._make_decode(n_steps)
         active = jnp.asarray(
             np.array([s is not None for s in self.slots]))
         args = (self.params, self.cache, self.last_token, self.pos, active,
@@ -782,12 +1112,26 @@ class Engine:
         self.decode_calls += 1
         self.decode_steps += n_steps
         self.host_transfer_bytes += block.nbytes
+        # pool-utilization sample: tokens live in active caches vs the token
+        # capacity of the blocks currently allocated (lazy vs reserve signal)
+        if self.has_paged and self.alloc.used_count:
+            self._util_token_sum += self.live_tokens()
+            self._util_cap_sum += self.alloc.used_count * self.block
+        dt = None
+        if self.clock is not None:
+            dt = self.clock.time_scale
+            self.clock.advance(n_steps * dt)
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            take = min(n_steps, req.max_new - len(req.out))
+            self._slot_pos[i] += n_steps
+            take = min(n_steps, req.effective_max - len(req.out))
             req.out.extend(int(t) for t in block[i, :take])
-            if len(req.out) >= req.max_new:
+            if dt is not None:
+                t_end = self.clock.now
+                req.token_times.extend(
+                    t_end - (take - 1 - j) * dt for j in range(take))
+            if len(req.out) >= req.effective_max:
                 self._retire(i)
         if shadow:
             self._maybe_check_drift()
@@ -819,10 +1163,72 @@ def serve(engine: Engine, requests: List[Request]) -> List[Request]:
                 "pool too small)")
             continue
         engine.decode_chunk()
+        if engine.preempted:
+            # recompute-preempted requests re-enter at the FRONT: they hold
+            # generated tokens (partial work) and freeing their successor
+            # blocks fastest means finishing them first
+            pending[:0] = engine.preempted
+            engine.preempted.clear()
         for r in engine.finished[done_mark:]:
             if r.error is None:
                 log.info("finished request %d: %d tokens", r.rid, len(r.out))
         done_mark = len(engine.finished)
+    return engine.finished
+
+
+def serve_slo(engine: Engine, requests: List[Request], policy=None,
+              controller=None) -> List[Request]:
+    """Real-time SLO serve loop: requests ARRIVE at their ``arrive_at``
+    virtual times, a ``launch.scheduler`` policy orders the queue and sheds
+    hopeless work, preempted requests re-queue at the front, and an optional
+    ``PressureController`` walks the EDAP frontier under load.
+
+    Every submitted request leaves through ``engine.finished`` exactly once -
+    completed, errored, or shed (request conservation, property-pinned).  The
+    loop is duck-typed over the engine (attributes: ``clock``, ``queue_depth``,
+    ``active``, ``preempted``, ``finished``; methods: ``admit_pending``,
+    ``decode_chunk``, ``fail_request``), so model-free fakes can drive the
+    scheduling invariants in tests."""
+    from repro.launch.scheduler import FIFOPolicy
+    from repro.runtime.workload import VirtualClock
+
+    if policy is None:
+        policy = FIFOPolicy()
+    if engine.clock is None:
+        engine.clock = VirtualClock()
+    clock = engine.clock
+    arrivals = sorted(requests, key=lambda r: (
+        r.arrive_at if r.arrive_at is not None else 0.0, r.rid))
+    queue: List[Request] = []
+    while arrivals or queue or engine.active:
+        while arrivals and (arrivals[0].arrive_at is None
+                            or arrivals[0].arrive_at <= clock.now):
+            queue.append(arrivals.pop(0))
+        if not queue and not engine.active:
+            # idle gap: jump to the next arrival instead of spinning
+            clock.advance(max(0.0, arrivals[0].arrive_at - clock.now))
+            continue
+        engine.queue_depth = len(queue)
+        if controller is not None:
+            controller.update()
+        for r in policy.shed(queue, clock.now):
+            engine.fail_request(
+                r, f"shed by {policy.name} policy at t={clock.now:.1f} "
+                   f"(TTFT deadline unmeetable)", kind="shed")
+        policy.order(queue, clock.now)
+        admitted = engine.admit_pending(queue)
+        engine.queue_depth = len(queue)
+        if queue and not engine.active and not admitted:
+            engine.fail_request(
+                queue.pop(0),
+                "cannot be admitted into an idle engine (slots or KV block "
+                "pool too small)")
+            continue
+        engine.decode_chunk()
+        if engine.preempted:
+            queue[:0] = engine.preempted
+            engine.preempted.clear()
+    engine.queue_depth = 0
     return engine.finished
 
 
@@ -881,16 +1287,61 @@ def main(argv=None):
                          "smoke runs still report deployment-scale energy")
     ap.add_argument("--energy-snr-db", default="14,26",
                     help="comma list of SNR_T targets for --energy-report")
+    ap.add_argument("--workload", default="none",
+                    choices=["none", "poisson", "bursty"],
+                    help="SLO workload mode: generate seeded timed arrivals "
+                         "(runtime.workload) and drive the engine through "
+                         "the real-time serve_slo loop under --slo-policy "
+                         "instead of replaying --prompt-lens offline")
+    ap.add_argument("--workload-seed", type=int, default=0,
+                    help="workload generator seed (every draw - arrivals, "
+                         "lengths, classes - is reproducible from it)")
+    ap.add_argument("--overload", type=float, default=2.0,
+                    help="offered load as a multiple of engine capacity "
+                         "(with --workload)")
+    ap.add_argument("--slo-policy", default="fifo",
+                    choices=["fifo", "sjf", "deadline"],
+                    help="scheduler policy for the SLO loop: fifo, "
+                         "shortest-prompt-first, or SLO-deadline admission "
+                         "with load shedding")
+    ap.add_argument("--alloc", default="lazy", choices=["lazy", "reserve"],
+                    help="KV block allocation: lazy (allocate on block-"
+                         "boundary crossing, preempt on pool exhaustion) or "
+                         "reserve (worst-case at admission)")
+    ap.add_argument("--degrade", action="store_true",
+                    help="load-adaptive frontier degradation: under queue/"
+                         "pool pressure, hot-swap the substrate one step "
+                         "down the EDAP frontier (lower B_ADC) and back up "
+                         "when pressure clears (requires --imc-mode "
+                         "imc_analytic --imc-policy frozen)")
+    ap.add_argument("--drift-pause-depth", type=int, default=None,
+                    help="pause drift shadow sampling while the queue is "
+                         "deeper than this (saturation guard)")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     rng = None
+    base_pt = None
+    if args.degrade:
+        if not (args.imc_mode == "imc_analytic"
+                and args.imc_policy == "frozen"):
+            ap.error("--degrade requires --imc-mode imc_analytic "
+                     "--imc-policy frozen (the frontier ladder re-freezes "
+                     "each level against the live calibration)")
+        from repro.core.design import optimize
+
+        base_pt = optimize(n=512, snr_t_target_db=26.0, kinds=("qr",))
     if args.imc_mode:
         from repro.core.imc_linear import IMCConfig
 
-        sub = substrate_lib.as_substrate(
-            IMCConfig(mode=args.imc_mode, bx=7, bw=7, v_wl=args.imc_vwl))
+        if base_pt is not None:
+            # start at the committed frontier point: the PressureController's
+            # ladder level 0 IS this substrate
+            sub = substrate_lib.substrate_for_design(base_pt)
+        else:
+            sub = substrate_lib.as_substrate(
+                IMCConfig(mode=args.imc_mode, bx=7, bw=7, v_wl=args.imc_vwl))
         cfg = cfg.replace(imc=sub)
         rng = jax.random.PRNGKey(7)
 
@@ -931,10 +1382,48 @@ def main(argv=None):
             check_every=args.drift_check_every))
     frozen0 = cfg.imc.calibration if args.imc_policy == "frozen" and \
         args.imc_mode else None
+    clock = None
+    if args.workload != "none":
+        from repro.runtime.workload import VirtualClock
+
+        clock = VirtualClock()
     engine = Engine(cfg, params, args.batch, cache_len, rng=rng,
                     max_chunk=args.chunk, block_size=args.block,
                     kv_blocks=args.kv_blocks, meter=meter,
-                    drift_monitor=monitor)
+                    drift_monitor=monitor, alloc_policy=args.alloc,
+                    clock=clock, drift_pause_depth=args.drift_pause_depth)
+
+    if args.workload != "none":
+        from repro.launch.metering import format_slo_summary, slo_summary
+        from repro.launch.scheduler import PressureController, make_policy
+        from repro.runtime import workload as workload_lib
+
+        wcfg = workload_lib.make_overload_config(
+            n_requests=args.requests, seed=args.workload_seed,
+            overload=args.overload, slots=args.batch, max_new=args.gen,
+            arrival=args.workload)
+        requests = workload_lib.generate(wcfg, cfg.vocab_size)
+        policy = make_policy(args.slo_policy)
+        controller = None
+        if base_pt is not None:
+            controller = PressureController(
+                engine, substrate_lib.substrate_ladder(base_pt, steps=2))
+        finished = serve_slo(engine, requests, policy=policy,
+                             controller=controller)
+        summary = slo_summary(finished, elapsed=engine.clock.now,
+                              policy=policy.name)
+        summary.update(
+            preemptions=engine.preempt_count,
+            shed=engine.shed_requests,
+            pool_utilization=round(engine.pool_utilization(), 4),
+            substrate_swaps=engine.substrate_swaps,
+        )
+        if controller is not None:
+            summary.update(controller.counters())
+        print(f"serve_slo [{args.workload} x{args.overload:g} overload, "
+              f"policy={policy.name}, alloc={args.alloc}]:")
+        print(format_slo_summary(summary))
+        return finished
 
     rnp = np.random.default_rng(0)
     requests = [

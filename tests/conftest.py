@@ -9,6 +9,20 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _bounded_xla_executable_accumulation():
+    """Drop compiled-executable caches at every module boundary.  A full
+    tier-1 run compiles hundreds of engine scans into ONE process; past a
+    few hundred live executables the CPU XLA client has been observed to
+    segfault inside backend_compile (deterministically, on the next scan
+    compile).  Per-module clearing bounds the live set; tests never share
+    compiled functions across modules, so this only costs recompiles."""
+    import jax
+
+    jax.clear_caches()
+    yield
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

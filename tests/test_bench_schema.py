@@ -8,6 +8,8 @@ import pytest
 
 from benchmarks.check_regression import (
     DRIFT_REQUIRED_FIELDS,
+    SLO_REQUIRED_FIELDS,
+    SLO_SUMMARY_REQUIRED_FIELDS,
     SUBSTRATE_REQUIRED_PREFIXES,
 )
 
@@ -32,8 +34,8 @@ def test_committed_bench_files_exist():
                          ids=[os.path.basename(p) for p in BENCH_FILES])
 def test_bench_schema(path):
     payload = _load(path)
-    assert payload["schema_version"] == 2.2
-    assert payload["schema"] == "repro-imc-bench/v2.2"
+    assert payload["schema_version"] == 2.3
+    assert payload["schema"] == "repro-imc-bench/v2.3"
     meta = payload["meta"]
     for key in REQUIRED_META:
         assert meta.get(key), f"meta.{key} missing/empty"
@@ -55,6 +57,14 @@ def test_bench_schema(path):
                     assert field in rec, \
                         f"{suite}: serve_drift record missing {field!r} " \
                         f"(schema v2.2)"
+            # schema v2.3: serve_slo records carry the overload scoreboard
+            # (also enforced by check_regression.py)
+            slo_required = {"serve_slo": SLO_REQUIRED_FIELDS,
+                            "serve_slo_summary": SLO_SUMMARY_REQUIRED_FIELDS}
+            for field in slo_required.get(rec.get("bench", ""), ()):
+                assert field in rec, \
+                    f"{suite}: {rec['bench']} record missing {field!r} " \
+                    f"(schema v2.3)"
 
 
 def test_serve_drift_record_committed():
@@ -74,6 +84,28 @@ def test_serve_drift_record_committed():
         assert r["sites_drifted"] >= 1
         assert r["recovery_gap_db_max"] <= 1.0
         assert r["failed_requests"] == 0
+
+
+def test_serve_slo_records_committed():
+    """The seeded 2x-overload bursty scenario is part of the committed serve
+    baseline: the deadline+lazy+degrade policy strictly beats the FIFO/reserve
+    baseline on goodput, lazy allocation raises pool utilization, at least one
+    recompute-preemption happened, no engine died, and every run conserved
+    its requests."""
+    payload = _load(os.path.join(ROOT, "BENCH_serve.json"))
+    records = payload["suites"]["serve"]["records"]
+    runs = [r for r in records if r["bench"] == "serve_slo"]
+    assert len(runs) >= 3, "BENCH_serve.json is missing serve_slo runs"
+    for r in runs:
+        assert r["engine_deaths"] == 0
+        assert r["conserved"] is True
+        assert r["errored"] == 0
+    (summary,) = [r for r in records if r["bench"] == "serve_slo_summary"]
+    assert summary["goodput_ratio"] > 1.0
+    assert summary["pool_util_gain"] > 0.0
+    assert summary["preempt_count"] >= 1
+    assert summary["engine_deaths"] == 0
+    assert summary["conserved"] is True
 
 
 def _energy_records():

@@ -321,7 +321,7 @@ def test_atomic_swap_bit_exact_no_recompile(mode):
     moved = _drive_chunks(eng2, reqs, swap_at=2, new_cal=grown)
     for b, s in zip(base[:2], moved[:2]):
         np.testing.assert_array_equal(b, s)
-    fn = eng2._decode_fns[(2, False)]
+    fn = eng2._decode_fns[(2, False, eng2.substrate.trace_key)]
     if hasattr(fn, "_cache_size"):
         assert fn._cache_size() == 1  # swap never re-traced the scan
 

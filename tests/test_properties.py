@@ -339,3 +339,165 @@ def test_swap_then_recheck_never_reflags(frozen, observed):
     rep = detect_drift(r, o, DriftThresholds(rel_excess=0.0, clip_rate=1.0))
     assert not rep.drifted
     assert all(e.rel_excess == 0.0 for e in rep.entries)
+
+
+# ---------------------------------------------------------------------------
+# overload resilience: allocator under lazy-grow + preempt/resume, and
+# request conservation through the SLO serve loop (launch.serve.serve_slo)
+# ---------------------------------------------------------------------------
+
+from repro.launch.scheduler import DeadlineSLOPolicy, FIFOPolicy  # noqa: E402
+from repro.launch.serve import Request, serve_slo  # noqa: E402
+from repro.runtime.workload import VirtualClock  # noqa: E402
+
+
+@given(
+    num_blocks=st.integers(3, 48),
+    ops=st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 8)),
+        min_size=1, max_size=80,
+    ),
+)
+@settings(max_examples=60, deadline=None)
+def test_block_allocator_conserved_under_lazy_grow_and_preemption(
+        num_blocks, ops):
+    """The lazy-allocation usage pattern: admit with a small initial grant,
+    GROW a live request mid-decode (block-boundary crossing), PREEMPT (free
+    everything it holds, remember it), RESUME (fresh grant).  Under every
+    interleaving: disjoint live sets, block 0 stays reserved, and
+    free + held == capacity exactly."""
+    alloc = BlockAllocator(num_blocks)
+    capacity = num_blocks - 1
+    live = []       # block-lists of admitted/resumed requests
+    preempted = 0   # resumable requests (hold nothing while preempted)
+
+    def check():
+        held = [b for blocks in live for b in blocks]
+        assert 0 not in held
+        assert len(held) == len(set(held))
+        assert alloc.free_count + len(held) == capacity
+        assert alloc.used_count == len(held)
+
+    for op, n in ops:
+        if op == 0:  # admit: initial lazy grant (>=1 block)
+            got = alloc.alloc(max(1, n % 4))
+            if got is not None:
+                live.append(got)
+        elif op == 1 and live:  # grow a live request by n blocks
+            idx = n % len(live)
+            before = alloc.free_count
+            got = alloc.alloc(n)
+            if got is None:
+                assert n > before  # all-or-nothing even mid-grow
+            else:
+                live[idx].extend(got)
+        elif op == 2 and live:  # preempt: victim frees EVERYTHING it holds
+            victim = live.pop(n % len(live))
+            alloc.free(victim)
+            preempted += 1
+        elif op == 3 and preempted:  # resume: fresh grant like admission
+            got = alloc.alloc(max(1, n % 4))
+            if got is not None:
+                preempted -= 1
+                live.append(got)
+        check()
+
+    for blocks in live:
+        alloc.free(blocks)
+    assert alloc.free_count == capacity and alloc.used_count == 0
+
+
+class _FakeSLOEngine:
+    """Model-free engine exposing exactly the serve_slo duck-type surface.
+
+    Each running request progresses one token per chunk; a hypothesis-drawn
+    per-rid budget makes it preempt (re-queue with its tokens) a bounded
+    number of times - the adversarial schedule the conservation property
+    must survive."""
+
+    def __init__(self, slots, chunks_needed, preempt_budget):
+        self.clock = VirtualClock()
+        self.queue_depth = 0
+        self.preempted = []
+        self.finished = []
+        self.running = []
+        self.slots = slots
+        self.chunks_needed = chunks_needed
+        self.preempt_budget = dict(preempt_budget)
+
+    @property
+    def active(self):
+        return len(self.running)
+
+    def admit_pending(self, queue):
+        admitted = []
+        while queue and len(self.running) < self.slots:
+            r = queue.pop(0)
+            if r.t_first is None:
+                r.t_first = self.clock.now
+            self.running.append(r)
+            admitted.append(r)
+        return admitted
+
+    def decode_chunk(self):
+        self.clock.advance(1.0)
+        still = []
+        for r in self.running:
+            if self.preempt_budget.get(r.rid, 0) > 0:
+                self.preempt_budget[r.rid] -= 1
+                r.preemptions += 1
+                self.preempted.append(r)
+                continue
+            r.out.append(0)
+            if len(r.out) >= self.chunks_needed.get(r.rid, 1):
+                self.finished.append(r)
+            else:
+                still.append(r)
+        self.running = still
+
+    def fail_request(self, req, error, kind="admission"):
+        req.error = RuntimeError(error)
+        req.error_kind = kind
+        self.finished.append(req)
+
+
+@given(
+    n=st.integers(1, 12),
+    slots=st.integers(1, 3),
+    seed=st.integers(0, 2**16),
+    deadline_policy=st.booleans(),
+)
+@settings(max_examples=50, deadline=None)
+def test_serve_slo_request_conservation(n, slots, seed, deadline_policy):
+    """Every submitted request leaves the loop exactly once - completed,
+    errored, or shed - under arbitrary arrival times, tight TTFT deadlines
+    and adversarial bounded preemption, with either policy; and no request
+    that survives shedding starves (the loop terminates with all work
+    retired)."""
+    rng = np.random.default_rng(seed)
+    reqs = [
+        Request(rid=i, prompt=np.zeros(4, np.int64), max_new=8,
+                arrive_at=float(rng.uniform(0, 10)),
+                ttft_deadline=(float(rng.uniform(0.1, 6))
+                               if rng.random() < 0.5 else None))
+        for i in range(n)
+    ]
+    chunks_needed = {i: int(rng.integers(1, 5)) for i in range(n)}
+    budget = {i: int(rng.integers(0, 3)) for i in range(n)}
+    eng = _FakeSLOEngine(slots, chunks_needed, budget)
+    policy = DeadlineSLOPolicy() if deadline_policy else FIFOPolicy()
+
+    finished = serve_slo(eng, list(reqs), policy=policy)
+
+    assert len(finished) == n  # conservation: exactly once each
+    assert sorted(r.rid for r in finished) == sorted(r.rid for r in reqs)
+    assert len({id(r) for r in finished}) == n
+    assert eng.running == [] and eng.preempted == []
+    for r in finished:
+        if r.error is None:
+            assert len(r.out) >= chunks_needed[r.rid]  # really finished
+        elif r.error_kind == "shed":
+            assert deadline_policy  # only the deadline policy sheds
+            assert r.out == []  # mid-flight requests are never shed
+    if not deadline_policy:
+        assert all(r.error is None for r in finished)  # FIFO: all complete

@@ -1,0 +1,367 @@
+"""Overload-resilience policy layer: scheduler policies, the pressure
+controller's frontier-degradation hysteresis, the seeded SLO workload
+generator, the SLO rollup, and the drift-pause-under-saturation contract.
+
+Policy/controller/workload/rollup tests are pure host-side (fake engines,
+no jit); the drift-pause test runs the real frozen imc_analytic engine.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core.design import frontier_ladder, optimize
+from repro.core.imc_linear import IMCConfig
+from repro.core.substrate import calibrate_model, substrate_ladder
+from repro.launch.metering import percentile, slo_summary
+from repro.launch.scheduler import (
+    DeadlineSLOPolicy,
+    FIFOPolicy,
+    PressureController,
+    ShortestPromptFirst,
+    make_policy,
+)
+from repro.launch.serve import Engine, Request, serve_slo
+from repro.models import init_params
+from repro.runtime.drift import DriftConfig, DriftMonitor
+from repro.runtime.workload import (
+    RequestClass,
+    VirtualClock,
+    WorkloadConfig,
+    generate,
+    make_overload_config,
+)
+
+TINY = dict(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+    max_seq=128, flash_q_block=16, flash_kv_block=16, dtype="float32",
+)
+DENSE = ArchConfig(name="t", family="dense", **TINY)
+
+_PARAMS = {}
+
+
+def jax_params(cfg):
+    key = id(cfg)
+    if key not in _PARAMS:
+        _PARAMS[key] = init_params(jax.random.PRNGKey(0), cfg)
+    return _PARAMS[key]
+
+
+def _frozen_cfg(mode="imc_analytic", seed=1):
+    cfg_dyn = DENSE.replace(imc=IMCConfig(mode=mode, bx=7, bw=7, v_wl=0.7))
+    params = jax_params(DENSE)
+    ref = np.random.default_rng(seed).integers(0, DENSE.vocab_size, (4, 24))
+    cfg = calibrate_model(cfg_dyn, params, [ref])
+    _PARAMS[id(cfg)] = params
+    return cfg, params
+
+
+def _req(rid, plen=4, out=0, arrive=None, ttft=None, itl=None, max_new=8):
+    r = Request(rid=rid, prompt=np.arange(plen, dtype=np.int32),
+                max_new=max_new, arrive_at=arrive, ttft_deadline=ttft,
+                itl_deadline=itl)
+    r.out = list(range(out))
+    return r
+
+
+# ---------------------------------------------------------------------------
+# scheduler policies (pure host-side)
+# ---------------------------------------------------------------------------
+
+
+def test_make_policy_and_unknown():
+    assert isinstance(make_policy("fifo"), FIFOPolicy)
+    assert isinstance(make_policy("sjf"), ShortestPromptFirst)
+    assert isinstance(make_policy("deadline"), DeadlineSLOPolicy)
+    with pytest.raises(ValueError, match="unknown scheduler policy"):
+        make_policy("lifo")
+
+
+def test_fifo_is_identity_and_never_sheds():
+    q = [_req(0, 9, arrive=0.0, ttft=1.0), _req(1, 2, arrive=0.0, ttft=1.0)]
+    p = FIFOPolicy()
+    assert p.shed(q, now=99.0) == []
+    p.order(q, now=99.0)
+    assert [r.rid for r in q] == [0, 1]
+
+
+def test_sjf_orders_by_effective_prompt_stably():
+    # rid 2 is mid-flight (prompt 2 + out 3 = 5); rids 0/1 tie at 4 and must
+    # keep arrival order; rid 3 is longest
+    q = [_req(0, 4), _req(1, 4), _req(2, 2, out=3), _req(3, 9)]
+    ShortestPromptFirst().order(q, now=0.0)
+    assert [r.rid for r in q] == [0, 1, 2, 3]
+
+
+def test_deadline_orders_resumed_first_then_edf():
+    q = [_req(0, arrive=0.0, ttft=50.0), _req(1, arrive=2.0, ttft=10.0),
+         _req(2, arrive=1.0, out=2, ttft=5.0), _req(3)]  # rid 3: no deadline
+    DeadlineSLOPolicy().order(q, now=0.0)
+    # resumed (rid 2) first, then EDF (12 < 50), no-deadline last
+    assert [r.rid for r in q] == [2, 1, 0, 3]
+
+
+def test_deadline_sheds_only_hopeless_fresh_requests():
+    p = DeadlineSLOPolicy(slack=1.0)
+    q = [
+        _req(0, arrive=0.0, ttft=5.0),          # overdue: 0+5+1 < 10
+        _req(1, arrive=8.0, ttft=5.0),          # still feasible
+        _req(2, arrive=0.0, out=3, ttft=5.0),   # resumed: never shed
+        _req(3),                                # no deadline: never shed
+    ]
+    doomed = p.shed(q, now=10.0)
+    assert [r.rid for r in doomed] == [0]
+    assert [r.rid for r in q] == [1, 2, 3]
+    assert p.shed_count == 1
+    # exactly at deadline + slack: not shed (strictly-greater-than)
+    q2 = [_req(4, arrive=4.0, ttft=5.0)]
+    assert p.shed(q2, now=10.0) == []
+
+
+# ---------------------------------------------------------------------------
+# pressure controller hysteresis (fake engine, no jit)
+# ---------------------------------------------------------------------------
+
+
+class _FakeDesign:
+    def __init__(self, delay):
+        self.delay_per_dp = delay
+        self.b_adc = 8
+
+
+class _FakeSub:
+    def __init__(self, delay):
+        self.design = _FakeDesign(delay)
+
+
+class _FakeAlloc:
+    def __init__(self, num_blocks=9, used=0):
+        self.num_blocks = num_blocks
+        self.used_count = used
+
+
+class _FakeEngine:
+    def __init__(self):
+        self.queue_depth = 0
+        self.batch_slots = 4
+        self.alloc = _FakeAlloc()
+        self.swaps = []
+
+    def swap_substrate(self, sub, time_scale=1.0):
+        self.swaps.append((sub, time_scale))
+
+
+def test_pressure_is_max_of_queue_and_pool():
+    eng = _FakeEngine()
+    pc = PressureController(eng, [_FakeSub(1.0)])
+    assert pc.pressure() == 0.0
+    eng.queue_depth = 2
+    assert pc.pressure() == pytest.approx(0.5)
+    eng.alloc.used_count = 6  # 6/8 > 2/4
+    assert pc.pressure() == pytest.approx(0.75)
+
+
+def test_controller_hysteresis_and_time_scales():
+    eng = _FakeEngine()
+    ladder = [_FakeSub(1.0), _FakeSub(0.5), _FakeSub(0.25)]
+    pc = PressureController(eng, ladder, high=1.0, low=0.25, hold=2)
+    assert pc.time_scales == [1.0, 0.5, 0.25]
+
+    eng.queue_depth = 8  # pressure 2.0
+    assert pc.update() == 0          # 1 hot tick: not yet
+    assert pc.update() == 1          # 2nd hot tick: degrade
+    assert eng.swaps[-1] == (ladder[1], 0.5)
+    assert pc.update() == 1          # counter reset on step
+    assert pc.update() == 2          # bottoms out next pair of ticks
+    assert pc.update() == 2          # already at last level: stays
+    assert pc.degrade_steps == 2
+
+    eng.queue_depth = 2              # mid-band pressure 0.5: counters reset
+    for _ in range(5):
+        assert pc.update() == 2
+    eng.queue_depth = 0              # cool
+    assert pc.update() == 2
+    assert pc.update() == 1          # upgrade after `hold` cool ticks
+    assert eng.swaps[-1] == (ladder[1], 0.5)
+    assert pc.update() == 1
+    assert pc.update() == 0
+    assert eng.swaps[-1] == (ladder[0], 1.0)
+    assert pc.counters() == {
+        "level": 0, "degrade_steps": 2, "upgrade_steps": 2}
+
+
+def test_controller_input_validation():
+    with pytest.raises(ValueError, match="non-empty"):
+        PressureController(_FakeEngine(), [])
+    with pytest.raises(ValueError, match="high > low"):
+        PressureController(_FakeEngine(), [_FakeSub(1.0)], high=0.2, low=0.5)
+
+
+def test_frontier_and_substrate_ladder():
+    pt = optimize(n=512, snr_t_target_db=26.0, kinds=("qr",))
+    ladder = frontier_ladder(pt, steps=2)
+    assert len(ladder) == 3
+    assert ladder[0] is pt
+    b = [d.b_adc for d in ladder]
+    assert b[0] > b[1] > b[2]
+    # stepping down the frontier must get cheaper per DP (the whole point)
+    delays = [d.delay_per_dp for d in ladder]
+    assert delays[0] > delays[1] > delays[2]
+    subs = substrate_ladder(pt, steps=2)
+    assert [s.design.b_adc for s in subs] == b
+    # ladder levels are distinct trace keys -> each compiles exactly once
+    assert len({s.trace_key for s in subs}) == 3
+
+
+# ---------------------------------------------------------------------------
+# workload generator (seeded, deterministic)
+# ---------------------------------------------------------------------------
+
+
+def test_workload_seed_reproducible_draw_for_draw():
+    wcfg = make_overload_config(n_requests=24, seed=7, overload=2.0, slots=4)
+    a = generate(wcfg, vocab_size=256)
+    b = generate(wcfg, vocab_size=256)
+    assert len(a) == len(b) == 24
+    for ra, rb in zip(a, b):
+        assert ra.rid == rb.rid
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+        assert ra.arrive_at == rb.arrive_at
+        assert ra.stop_at == rb.stop_at
+        assert ra.rclass == rb.rclass
+        assert ra.ttft_deadline == rb.ttft_deadline
+    c = generate(make_overload_config(n_requests=24, seed=8), vocab_size=256)
+    assert any(na.arrive_at != nc.arrive_at for na, nc in zip(a, c))
+
+
+@pytest.mark.parametrize("arrival", ["poisson", "bursty"])
+def test_workload_bounds_and_monotone_arrivals(arrival):
+    wcfg = WorkloadConfig(n_requests=40, seed=3, arrival=arrival,
+                          prompt_min=2, prompt_max=16, max_new=6)
+    reqs = generate(wcfg, vocab_size=256)
+    classes = {c.name: c for c in wcfg.classes}
+    last = 0.0
+    for r in reqs:
+        assert 2 <= len(r.prompt) <= 16
+        assert r.prompt.min() >= 0 and r.prompt.max() < 256
+        assert 1 <= r.stop_at <= r.max_new == 6
+        assert r.arrive_at >= last
+        last = r.arrive_at
+        cls = classes[r.rclass]
+        assert r.ttft_deadline == cls.ttft_deadline
+        assert r.itl_deadline == cls.itl_deadline
+
+
+def test_overload_config_scales_interarrival():
+    """2x overload means arrivals land twice as fast as service capacity."""
+    one = make_overload_config(n_requests=8, seed=0, overload=1.0, slots=4)
+    two = make_overload_config(n_requests=8, seed=0, overload=2.0, slots=4)
+    assert two.mean_interarrival == pytest.approx(one.mean_interarrival / 2)
+
+
+def test_workload_config_validation():
+    with pytest.raises(ValueError, match="arrival"):
+        WorkloadConfig(arrival="uniform")
+    with pytest.raises(ValueError, match="class"):
+        WorkloadConfig(classes=())
+
+
+def test_virtual_clock():
+    # advance() adds raw dt; the ENGINE pre-multiplies decode chunks by
+    # time_scale (clock.advance(n_steps * clock.time_scale))
+    clk = VirtualClock()
+    clk.advance(2.0)
+    clk.time_scale = 0.5
+    clk.advance(4 * clk.time_scale)
+    assert clk.now == pytest.approx(4.0)
+    with pytest.raises(ValueError):
+        clk.advance(-1.0)
+
+
+# ---------------------------------------------------------------------------
+# SLO rollup accounting
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_nearest_rank():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 50) == 2.0
+    assert percentile(xs, 99) == 4.0
+    assert percentile([5.0], 50) == 5.0
+    assert np.isnan(percentile([], 50))
+
+
+def _finished_fixture():
+    ok = _req(0, arrive=0.0, ttft=5.0, itl=2.0)
+    ok.t_first = 3.0
+    ok.token_times = [3.0, 4.0, 5.0]
+    late = _req(1, arrive=0.0, ttft=2.0, itl=10.0)
+    late.t_first = 6.0  # TTFT 6 > 2
+    late.token_times = [6.0, 7.0]
+    gappy = _req(2, arrive=0.0, ttft=50.0, itl=1.5)
+    gappy.t_first = 1.0
+    gappy.token_times = [1.0, 2.0, 6.0]  # gap 4 > 1.5
+    shed = _req(3, arrive=0.0, ttft=2.0)
+    shed.error = RuntimeError("shed by deadline policy")
+    shed.error_kind = "shed"
+    dead = _req(4)
+    dead.error = RuntimeError("decode failed")
+    dead.error_kind = "decode"
+    return [ok, late, gappy, shed, dead]
+
+
+def test_slo_summary_accounting():
+    s = slo_summary(_finished_fixture(), elapsed=10.0, policy="deadline")
+    assert s["policy"] == "deadline"
+    assert s["requests"] == 5
+    assert s["completed"] == 3
+    assert s["shed"] == 1 and s["errored"] == 1
+    assert s["ttft_miss"] == 1 and s["itl_miss"] == 1
+    assert s["slo_met"] == 1
+    assert s["goodput"] == pytest.approx(0.1)
+    # ok carries 3 tokens (len(out) == 0 in fixture -> tokens from out list)
+    assert s["ttft_p50"] == pytest.approx(3.0)
+    assert s["itl_p50"] == pytest.approx(1.0)
+    assert s["itl_p99"] == pytest.approx(4.0)
+
+
+# ---------------------------------------------------------------------------
+# satellite: drift shadow sampling pauses while saturated
+# ---------------------------------------------------------------------------
+
+
+def test_drift_sampling_pauses_under_saturation():
+    """While queue_depth exceeds ``drift_pause_depth`` the monitor's cadence
+    counter is not consulted (no shadow samples, phase frozen); when pressure
+    clears, sampling resumes exactly where it left off."""
+    cfg, params = _frozen_cfg("imc_analytic")
+    mon = DriftMonitor(DriftConfig(sample_every=1, check_every=100,
+                                   auto_swap=False))
+    eng = Engine(cfg, params, batch_slots=2, cache_len=32, max_chunk=2,
+                 drift_monitor=mon, drift_pause_depth=0)
+    reqs = [Request(rid=i,
+                    prompt=np.random.default_rng(i).integers(0, 256, 5),
+                    max_new=6) for i in range(2)]
+    eng.admit_pending(reqs)
+    assert not reqs
+
+    eng.queue_depth = 3  # saturated: above pause depth
+    eng.decode_chunk()
+    eng.decode_chunk()
+    assert mon.chunks_seen == 0 and mon.samples == 0  # cadence frozen
+
+    eng.queue_depth = 0  # pressure cleared: cadence resumes
+    eng.decode_chunk()
+    assert mon.chunks_seen == 1 and mon.samples == 1
+
+    # no pause configured -> always samples, regardless of queue depth
+    eng2 = Engine(cfg, params, batch_slots=2, cache_len=32, max_chunk=2,
+                  drift_monitor=DriftMonitor(
+                      DriftConfig(sample_every=1, check_every=100,
+                                  auto_swap=False)))
+    reqs2 = [Request(rid=9, prompt=np.arange(4, dtype=np.int32), max_new=4)]
+    eng2.admit_pending(reqs2)
+    eng2.queue_depth = 99
+    eng2.decode_chunk()
+    assert eng2._drift.chunks_seen == 1

@@ -413,3 +413,104 @@ def test_exact_prefill_recurrent_still_served():
         ref = _greedy_sequential(cfg, next(q.prompt for q in reqs
                                            if q.rid == r.rid), max_new)
         assert r.out == ref, (r.rid, r.out, ref)
+
+
+# ---------------------------------------------------------------------------
+# preemptive paged KV: lazy growth, recompute-preemption, utilization
+# ---------------------------------------------------------------------------
+
+
+def _frozen_smoke(substrate):
+    """Frozen-calibration smoke config (batch-invariant in the IMC modes:
+    the precondition for bit-exact recompute-preemption)."""
+    base = configs.get_smoke("musicgen-medium")
+    if substrate == "digital":
+        return base
+    cfg_dyn = _with_substrate(base, substrate)
+    params = jax_params(cfg_dyn)
+    ref_batch = np.random.default_rng(1).integers(0, base.vocab_size, (2, 24))
+    cfg = calibrate_model(cfg_dyn, params, [ref_batch])
+    _PARAMS[id(cfg)] = params
+    assert as_substrate(cfg.imc).policy == "frozen"
+    return cfg
+
+
+@pytest.mark.parametrize("substrate", SUBSTRATES)
+def test_recompute_preemption_bit_exact(substrate):
+    """THE preemption acceptance contract: a pool too small for both
+    residents' generation tails forces mid-decode lazy growth to fail, the
+    victim is recompute-preempted (blocks freed, re-queued with
+    prompt+generated-so-far), and every request still finishes with tokens
+    BIT-IDENTICAL to an uninterrupted ample-pool run - on all three
+    substrates (IMC modes frozen: batched == sequential, so the resume
+    prefill replays exactly the decode state it abandoned)."""
+    cfg = _frozen_smoke(substrate)
+    max_new = 5  # total positions 5+5-1=9 -> worst case 2 blocks/request
+    lens = [5, 5]
+
+    def _run(kv_blocks):
+        eng = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=32,
+                     max_chunk=4, kv_blocks=kv_blocks)
+        done = serve(eng, [Request(rid=r.rid, prompt=r.prompt,
+                                   max_new=max_new)
+                           for r in _requests(cfg, lens, max_new)])
+        return eng, {r.rid: r for r in done}
+
+    ample_eng, ample = _run(kv_blocks=16)
+    assert ample_eng.preempt_count == 0
+    # 3 usable blocks < 2 residents x 2 worst-case: growth must preempt
+    tight_eng, tight = _run(kv_blocks=4)
+    assert tight_eng.preempt_count >= 1
+    for rid in ample:
+        assert tight[rid].error is None
+        assert tight[rid].out == ample[rid].out, (
+            substrate, rid, tight[rid].out, ample[rid].out)
+    assert sum(r.preemptions for r in tight.values()) \
+        == tight_eng.preempt_count
+    assert tight_eng.alloc.used_count == 0  # nothing leaked across preempts
+
+
+def test_lazy_allocation_raises_pool_utilization():
+    """The lazy-allocation payoff: on an early-stopping mix (stop_at well
+    under the max_new cap) worst-case reservation parks blocks that are
+    never written; lazy allocation holds only prompt coverage + crossed
+    boundaries, so measured pool utilization (live tokens / held capacity)
+    is strictly higher - with bit-identical outputs."""
+    cfg = DENSE
+
+    def _run(alloc_policy):
+        eng = Engine(cfg, jax_params(cfg), batch_slots=4, cache_len=64,
+                     max_chunk=4, kv_blocks=13, alloc_policy=alloc_policy)
+        reqs = [Request(rid=r.rid, prompt=r.prompt, max_new=16, stop_at=3)
+                for r in _requests(cfg, [5, 6, 5, 7], 16, seed=11)]
+        done = serve(eng, reqs)
+        assert all(r.error is None and len(r.out) == 3 for r in done)
+        return eng, {r.rid: r.out for r in done}
+
+    lazy_eng, lazy_out = _run("lazy")
+    res_eng, res_out = _run("reserve")
+    assert lazy_out == res_out
+    assert lazy_eng.preempt_count == res_eng.preempt_count == 0
+    lazy_util, res_util = lazy_eng.pool_utilization(), \
+        res_eng.pool_utilization()
+    assert lazy_util > res_util, (lazy_util, res_util)
+    assert lazy_eng.alloc.used_count == res_eng.alloc.used_count == 0
+
+
+def test_reserve_policy_still_supported():
+    """--alloc reserve keeps the PR-3 worst-case admission contract: blocks
+    for the whole generation tail are held from admission, so lazy growth
+    (and preemption) never triggers."""
+    cfg = DENSE
+    eng = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=32,
+                 max_chunk=4, alloc_policy="reserve")
+    reqs = _requests(cfg, [5], 6, seed=12)
+    pending = [Request(rid=0, prompt=reqs[0].prompt, max_new=6)]
+    eng.admit_pending(pending)
+    # worst case held from admission: ceil((5 + 6 - 1) / 8) = 2 blocks
+    assert eng.alloc.used_count == 2
+    serve(eng, [])
+    assert eng.preempt_count == 0
+    with pytest.raises(ValueError, match="alloc_policy"):
+        Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=32,
+               alloc_policy="eager")
