@@ -23,12 +23,17 @@ A baseline record missing from the current run is a failure (a silently
 dropped bench is exactly the "stale artifact" failure mode this gate
 exists for); extra current records are allowed (new benches land first).
 
-Bench schema v2.3: serve-suite records must carry a ``substrate`` field
+Bench schema v2.4: serve-suite records must carry a ``substrate`` field
 naming the Substrate they ran on / billed (since v2.1), ``serve_drift``
 records must carry the full drift-report surface (detection, swap and
-recovery fields - since v2.2), and ``serve_slo`` records must carry the
+recovery fields - since v2.2), ``serve_slo`` records must carry the
 overload scoreboard (goodput, latency percentiles, shed/preempt/degrade
-counters, engine_deaths, conservation - new in v2.3);
+counters, engine_deaths, conservation - since v2.3), and engine-comparison
+``serve`` records must carry a ``decode_attn`` field naming the decode
+attention path they ran ("kernel" / "gather" for the paged engine, "dense"
+for the contiguous/wave baselines - new in v2.4, alongside the
+``paged_attention`` kernel bench whose ``gathered_kv_bytes_*`` counters pin
+the gathered-KV copy eliminated);
 :func:`validate_schema` fails either side of a pair with a clear message
 when any of it is missing.
 """
@@ -48,6 +53,7 @@ ID_FIELDS = (
     "snr_t_target_db", "snr_low_db", "snr_high_db", "inject_scale",
     "policy", "alloc", "degrade", "workload_seed", "overload", "arrival",
     "kv_blocks",
+    "blocks", "block_size", "heads", "kv_heads", "head_dim", "decode_attn",
 )
 
 # bench schema v2.1: every serve-suite record must name the execution
@@ -85,6 +91,15 @@ RULES: Dict[str, Tuple[str, float]] = {
     # absolute floor asserts "not slower than seed beyond noise")
     "speedup_vs_seed": ("min_abs", 0.8),
     "speedup_vs_seed_noise": ("min_abs", 0.5),
+    # paged-attention decode step (schema v2.4): the gathered-KV working set
+    # is a deterministic function of the shape -> exact; the before/after
+    # reduction IS the acceptance invariant (gather copy -> O(1) block).
+    # wall ratio gets only a generous same-box floor
+    "gathered_kv_bytes_per_step": ("exact", 0.0),
+    "gathered_kv_bytes_before": ("exact", 0.0),
+    "gathered_kv_bytes_after": ("exact", 0.0),
+    "gathered_kv_reduction": ("exact", 0.0),
+    "speedup_vs_gather": ("min_abs", 0.2),
     # serve bench structural counters
     "prefill_calls": ("exact", 0.0),
     "prefill_rows": ("exact", 0.0),
@@ -266,7 +281,7 @@ def compare_metric(name: str, base, cur) -> str:
 
 
 def validate_schema(payload: dict, label: str) -> List[str]:
-    """Bench-schema v2.3 structural checks (run on BOTH sides of a pair: a
+    """Bench-schema v2.4 structural checks (run on BOTH sides of a pair: a
     stale committed baseline must fail just as loudly as a bad CI run)."""
     failures: List[str] = []
     for suite, body in payload.get("suites", {}).items():
@@ -282,6 +297,13 @@ def validate_schema(payload: dict, label: str) -> List[str]:
                     f"{label}: record {ident} is missing its 'substrate' "
                     f"field (required since bench schema v2.1: every serve "
                     f"record must name the Substrate it ran on/billed - "
+                    f"regenerate the artifact with benchmarks/run.py)")
+            if bench == "serve" and "decode_attn" not in rec:
+                failures.append(
+                    f"{label}: serve record {ident} is missing its "
+                    f"'decode_attn' field (required since bench schema "
+                    f"v2.4: every engine-comparison record must name the "
+                    f"decode attention path it ran - kernel/gather/dense - "
                     f"regenerate the artifact with benchmarks/run.py)")
             if bench == "serve_drift":
                 missing = [f for f in DRIFT_REQUIRED_FIELDS if f not in rec]

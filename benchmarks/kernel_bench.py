@@ -10,6 +10,16 @@ HBM-materialized ``(n_banks, Bw*Bx, B, M)`` tensor), so every run reports the
 before/after trajectory this PR's rewrite established - in particular the
 noise-operand HBM bytes, the structural quantity the rewrite eliminates.
 
+Also benches the paged-attention decode step (``bench: paged_attention``):
+the gather path materializes every resident slot's KV out of the block pool
+(``pool[bt]``) before attending - O(slots * blocks) HBM traffic per decoded
+token - while the fused kernel streams one physical block at a time through
+the online-softmax accumulator, so the materialized copy is a single
+block-sized working set, O(1) in sequence length.  The structural counter
+``gathered_kv_bytes_per_step`` records exactly that quantity; the summary's
+``gathered_kv_reduction`` is the deterministic before/after ratio the
+regression gate pins.
+
 ``bench_records()`` returns machine-readable dicts (consumed by
 ``benchmarks/run.py --json``); ``run()`` formats them as the usual CSV rows.
 """
@@ -24,7 +34,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import imc_mvm, ref
-from repro.kernels.ref import BitSerialSpec, quantize_codes
+from repro.kernels.paged_attention import paged_attention_decode
+from repro.kernels.ref import (
+    BitSerialSpec,
+    paged_attention_ref,
+    quantize_codes,
+)
 
 Row = Tuple[str, float, str]
 
@@ -33,6 +48,12 @@ SHAPES = [
     (64, 512, 128, 6, 6),
     (128, 1024, 256, 7, 7),
     (32, 2048, 128, 4, 4),
+]
+
+PAGED_SHAPES = [
+    # (slots, blocks per slot, block_size, kv heads, q groups, head_dim)
+    (4, 8, 8, 2, 2, 64),
+    (8, 16, 8, 4, 2, 64),
 ]
 
 
@@ -161,6 +182,82 @@ def _structure(b, k, m, bx, bw, rows, design: str, noisy: bool):
     return counters
 
 
+def _paged_structure(slots, blocks, bs, hkv, hd, design: str):
+    """KV bytes materialized OUTSIDE the block pool per decode step (f32
+    K + V).  The gather path copies every resident slot's whole table
+    (``pool[bt]``); the fused kernel's only materialized KV is the single
+    block streamed through VMEM at each grid step - O(1) in both slot count
+    and sequence length."""
+    kv_elem = 4 * 2  # f32, K and V
+    if design == "gather":
+        gathered = slots * blocks * bs * hkv * hd * kv_elem
+    else:
+        gathered = bs * hkv * hd * kv_elem
+    return {"gathered_kv_bytes_per_step": gathered}
+
+
+def paged_attention_records(iters: int = 3) -> List[dict]:
+    """Decode-step records: gather path vs fused streaming kernel (the
+    pure-JAX block-walk the serve engine runs on CPU; on TPU the same walk
+    is the Pallas grid)."""
+    records: List[dict] = []
+    key = jax.random.PRNGKey(1)
+    for (slots, blocks, bs, hkv, g, hd) in PAGED_SHAPES:
+        ks = jax.random.split(jax.random.fold_in(key, slots * blocks), 5)
+        n_pool = slots * blocks + 1  # + reserved garbage block 0
+        q = jax.random.normal(ks[0], (slots, hkv, g, hd))
+        kn = jax.random.normal(ks[1], (slots, hkv, hd))
+        vn = jax.random.normal(ks[2], (slots, hkv, hd))
+        pk = jax.random.normal(ks[3], (n_pool, bs, hkv, hd))
+        pv = jax.random.normal(ks[4], (n_pool, bs, hkv, hd))
+        bt = 1 + jnp.arange(slots * blocks, dtype=jnp.int32).reshape(
+            slots, blocks)
+        # mid-block tail positions, staggered so the causal mask varies
+        pos_b = (blocks // 2) * bs + 3 + jnp.arange(slots, dtype=jnp.int32)
+        scale = hd ** -0.5
+
+        shape_meta = {"slots": slots, "blocks": blocks, "block_size": bs,
+                      "heads": hkv * g, "kv_heads": hkv, "head_dim": hd}
+        configs = {
+            "gather": (
+                jax.jit(lambda q_, kn_, vn_: paged_attention_ref(
+                    q_, kn_, vn_, pk, pv, bt, pos_b, scale=scale)),
+                "gather",
+            ),
+            "kernel": (
+                jax.jit(lambda q_, kn_, vn_: paged_attention_decode(
+                    q_, kn_, vn_, pk, pv, bt, pos_b, scale=scale,
+                    use_pallas=False)),
+                "kernel",
+            ),
+        }
+        for cname, (fn, design) in configs.items():
+            # block inside the callable: these ops are microsecond-scale, so
+            # an async (unblocked) warmup would bleed compile time into the
+            # first timed iteration and swamp the measurement
+            call = (lambda fn=fn: jax.block_until_ready(fn(q, kn, vn)))
+            rec = {"bench": "paged_attention", "config": cname, **shape_meta,
+                   "wall_us": round(_bench(call, iters=iters), 1),
+                   **_paged_structure(slots, blocks, bs, hkv, hd, design)}
+            records.append(rec)
+        by_cfg = {r["config"]: r for r in records
+                  if r.get("bench") == "paged_attention"
+                  and (r["slots"], r["blocks"]) == (slots, blocks)}
+        records.append({
+            "bench": "paged_attention_summary", **shape_meta,
+            "speedup_vs_gather": round(
+                by_cfg["gather"]["wall_us"] / by_cfg["kernel"]["wall_us"], 2),
+            "gathered_kv_bytes_before":
+                by_cfg["gather"]["gathered_kv_bytes_per_step"],
+            "gathered_kv_bytes_after":
+                by_cfg["kernel"]["gathered_kv_bytes_per_step"],
+            "gathered_kv_reduction": round(
+                by_cfg["gather"]["gathered_kv_bytes_per_step"]
+                / by_cfg["kernel"]["gathered_kv_bytes_per_step"], 1),
+        })
+    return records
+
+
 def bench_records(iters: int = 3) -> List[dict]:
     """Machine-readable per-(shape, config) records for run.py --json."""
     records: List[dict] = []
@@ -238,12 +335,30 @@ def bench_records(iters: int = 3) -> List[dict]:
             "mxu_calls_before": by_cfg["seed_baseline"]["mxu_calls"],
             "mxu_calls_after": by_cfg["kernel"]["mxu_calls"],
         })
+    records.extend(paged_attention_records(iters=iters))
     return records
 
 
 def rows_from_records(records: List[dict]) -> List[Row]:
     rows: List[Row] = []
     for r in records:
+        if r["bench"].startswith("paged_attention"):
+            tag = (f"S{r['slots']}_N{r['blocks']}x{r['block_size']}"
+                   f"_H{r['heads']}_D{r['head_dim']}")
+            if r["bench"] == "paged_attention_summary":
+                rows.append((
+                    f"kernel/paged_summary_{tag}",
+                    r["speedup_vs_gather"],
+                    f"gathered_kv_B {r['gathered_kv_bytes_before']}->"
+                    f"{r['gathered_kv_bytes_after']} "
+                    f"({r['gathered_kv_reduction']}x)",
+                ))
+            else:
+                rows.append((
+                    f"kernel/paged_{r['config']}_{tag}", r["wall_us"],
+                    f"gathered_kv_B={r['gathered_kv_bytes_per_step']}",
+                ))
+            continue
         tag = f"B{r['B']}_K{r['K']}_M{r['M']}_b{r['bx']}x{r['bw']}"
         if r["bench"] == "bitserial_summary":
             rows.append((

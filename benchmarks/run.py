@@ -79,16 +79,18 @@ def main() -> None:
         # the serve bench surface reports energy too: selecting the serve
         # suite pulls in the (memoized, deterministic) serve_energy rollup
         only.add("serve_energy")
-    # schema v2.3: serve-suite records name the execution substrate they
+    # schema v2.4: serve-suite records name the execution substrate they
     # ran/billed (since v2.1), serve_drift records carry the full
-    # detection/swap/recovery report surface (since v2.2), and serve_slo
+    # detection/swap/recovery report surface (since v2.2), serve_slo
     # records carry the overload scoreboard - goodput, TTFT/ITL percentiles,
     # shed/preempt/degrade counters, engine_deaths, conservation - for the
-    # committed seeded 2x-overload scenario (all enforced by
-    # check_regression.py)
+    # committed seeded 2x-overload scenario (since v2.3), and engine
+    # "serve" records name their decode-attention path (kernel/gather/
+    # dense) alongside the paged_attention kernel bench records (new in
+    # v2.4; all enforced by check_regression.py)
     payload = {
-        "schema": "repro-imc-bench/v2.3",
-        "schema_version": 2.3,
+        "schema": "repro-imc-bench/v2.4",
+        "schema_version": 2.4,
         "backend": jax.default_backend(),
         # machine/XLA provenance: lets the regression gate (and humans) tell
         # a real perf change from a toolchain change, and the schema test

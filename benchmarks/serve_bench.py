@@ -534,8 +534,13 @@ def bench_records() -> List[dict]:
         paged_rec = max(
             (_run_engine(paged, cfg, MIXED_LENS, n_requests)
              for _ in range(REPEATS)), key=lambda r: r["tok_s"])
-        records.append({**meta, "config": "contiguous_engine", **cont_rec})
-        records.append({**meta, "config": "paged_engine", **paged_rec})
+        # schema v2.4: every serve record names its decode-attention path -
+        # "dense" for the contiguous/wave baselines (full-cache attention),
+        # cfg.decode_attn for the paged engine (fused kernel vs gather)
+        records.append({**meta, "config": "contiguous_engine",
+                        "decode_attn": "dense", **cont_rec})
+        records.append({**meta, "config": "paged_engine",
+                        "decode_attn": cfg.decode_attn, **paged_rec})
         records.append({
             **meta, "bench": "serve_summary",
             "speedup_tok_s": round(paged_rec["tok_s"] / cont_rec["tok_s"], 2)
@@ -561,7 +566,7 @@ def bench_records() -> List[dict]:
                     "substrate": "digital",
                     "config": "wave_baseline", "slots": BATCH,
                     "requests": REQUESTS, "prompt_len": PROMPT_LEN,
-                    "gen": GEN, **wave})
+                    "gen": GEN, "decode_attn": "dense", **wave})
     records.extend(drift_records())
     records.extend(slo_records())
     return records

@@ -79,6 +79,13 @@ class ArchConfig:
     remat: bool = True  # rematerialize each block in train step
     flash_q_block: int = 512
     flash_kv_block: int = 1024
+    # decode attention over the paged KV pool: "kernel" streams blocks
+    # through the fused online-softmax kernel (repro.kernels.paged_attention,
+    # Pallas on TPU / the identical-math pure-JAX walk elsewhere); "gather"
+    # is the reference escape hatch that materializes pool[bt] each step.
+    # Static per engine (baked into AttnDims at trace time), so flipping it
+    # can't key-thrash the serve jit caches.
+    decode_attn: str = "kernel"
 
     # ------------------------------------------------------------------
     @property

@@ -1,4 +1,5 @@
-"""Pure-jnp oracles for the IMC matrix-multiply kernels.
+"""Pure-jnp oracles for the IMC matrix-multiply kernels (and the paged-
+attention decode kernel - see :func:`paged_attention_ref` at the bottom).
 
 These implement exactly the same math as the Pallas kernels in imc_mvm.py and
 are the ground truth for the interpret-mode allclose sweeps in
@@ -237,3 +238,52 @@ def imc_analytic_ref(
     if spec.apply_adc:
         y = mpc_adc(y, spec.b_adc, spec.y_clip)
     return y
+
+
+# ---------------------------------------------------------------------------
+# paged-attention decode oracle: scatter, gather pool[bt], full softmax
+# ---------------------------------------------------------------------------
+
+
+def paged_attention_ref(
+    q: jax.Array,       # (B, Hkv, G, hd) grouped queries
+    k_new: jax.Array,   # (B, Hkv, hd) new token K
+    v_new: jax.Array,   # (B, Hkv, hd) new token V
+    pk: jax.Array,      # (num_blocks, bs, Hkv, hd) key pool
+    pv: jax.Array,      # (num_blocks, bs, Hkv, hd) value pool
+    bt: jax.Array,      # (B, max_blocks) int32 block table
+    pos_b: jax.Array,   # (B,) int32 per-slot depth
+    active: Optional[jax.Array] = None,  # (B,) bool write mask
+    *,
+    scale: float,
+    softcap: Optional[float] = None,
+):
+    """Gather-path oracle for ``paged_attention.paged_attention_decode``.
+
+    Scatters the new token into the pool (same garbage-block-0 routing as the
+    kernel - ``paged_attention.write_routing`` is the shared source of truth),
+    materializes the gathered ``pool[bt]`` view and runs a FULL-row softmax
+    over it - exactly the reference math of the serve engine's gather escape
+    hatch.  The kernel's online softmax matches it to allclose tolerance (the
+    streamed m/l/corr recurrence rounds differently in the last ulps); the
+    updated pools match bit-exactly.  Returns ``(ctx, pk, pv)``.
+    """
+    from repro.kernels.paged_attention import NEG_INF, write_routing
+
+    b, max_blocks = bt.shape
+    bs, hkv, hd = pk.shape[1], pk.shape[2], pk.shape[3]
+    pos_b = pos_b.astype(jnp.int32)
+    dest, off = write_routing(bt, pos_b, bs, active)
+    pk = pk.at[dest, off].set(k_new.astype(pk.dtype))
+    pv = pv.at[dest, off].set(v_new.astype(pv.dtype))
+    s_kv = max_blocks * bs
+    k = pk[bt].reshape(b, s_kv, hkv, hd).astype(jnp.float32)
+    v = pv[bt].reshape(b, s_kv, hkv, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", q.astype(jnp.float32), k) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = jnp.arange(s_kv)[None, :] <= pos_b[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhgk,bkhd->bhgd", p, v)
+    return ctx, pk, pv

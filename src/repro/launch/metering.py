@@ -448,7 +448,16 @@ def slo_summary(requests, elapsed: float, policy: str = "") -> dict:
         if not miss:
             slo_met += 1
             slo_tokens += len(r.out)
-    elapsed = max(elapsed, 1e-9)
+    if elapsed > 0:
+        goodput = slo_met / elapsed
+        goodput_tokens = slo_tokens / elapsed
+    else:
+        # empty / instantly-drained workload: a rate over zero elapsed time
+        # is undefined - report 0.0 when nothing met its SLO and NaN when
+        # something did (matching percentile() on empty input), instead of
+        # the absurd ~1e9x inflation a clamped divisor produces
+        goodput = 0.0 if slo_met == 0 else float("nan")
+        goodput_tokens = 0.0 if slo_tokens == 0 else float("nan")
     return {
         "policy": policy,
         "requests": len(requests),
@@ -460,8 +469,8 @@ def slo_summary(requests, elapsed: float, policy: str = "") -> dict:
         "slo_met": slo_met,
         "preemptions": preemptions,
         "elapsed_steps": round(elapsed, 3),
-        "goodput": slo_met / elapsed,
-        "goodput_tokens": slo_tokens / elapsed,
+        "goodput": goodput,
+        "goodput_tokens": goodput_tokens,
         "ttft_p50": percentile(ttfts, 50),
         "ttft_p99": percentile(ttfts, 99),
         "itl_p50": percentile(gaps, 50),

@@ -1317,10 +1317,19 @@ def main(argv=None):
     ap.add_argument("--drift-pause-depth", type=int, default=None,
                     help="pause drift shadow sampling while the queue is "
                          "deeper than this (saturation guard)")
+    ap.add_argument("--decode-attn", default="kernel",
+                    choices=["kernel", "gather"],
+                    help="paged decode attention: 'kernel' streams KV blocks "
+                         "through the fused online-softmax paged-attention "
+                         "kernel (default); 'gather' is the reference escape "
+                         "hatch that materializes pool[bt] each step.  Baked "
+                         "into the engine cfg at construction (static at "
+                         "trace time), so it cannot thrash the jit caches")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    cfg = cfg.replace(decode_attn=args.decode_attn)
     rng = None
     base_pt = None
     if args.degrade:

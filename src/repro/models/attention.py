@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.imc_linear import DIGITAL, IMCConfig, linear
+from repro.kernels.paged_attention import paged_attention_decode, write_routing
 from repro.launch.sharding import attn_carry_pin, attn_expand_groups, attn_grad_spec, ws, ws_attn
 from repro.models.layers import dense_init, rope, softcap
 
@@ -45,6 +46,11 @@ class AttnDims(NamedTuple):
     kv_block: int
     rope_theta: float
     use_rope: bool
+    # paged decode attention: True streams KV blocks through the fused
+    # online-softmax kernel (repro.kernels.paged_attention); False takes the
+    # reference gather path that materializes pool[bt] (escape hatch,
+    # cfg.decode_attn="gather")
+    paged_kernel: bool = True
 
 
 def _project_qkv(params, x, dims: AttnDims, positions, imc, rng,
@@ -332,8 +338,9 @@ def attention_forward(
     if dims.window is not None and dims.window < x.shape[1]:
         ctx = banded_attention(q, k, v, dims)
     else:
-        d_nowin = dims._replace(window=None) if dims.window is not None else dims
-        ctx = flash_attention(q, k, v, d_nowin if dims.window is None else dims)
+        # window >= S covers every causal pair: run flash with the window
+        # mask dropped instead of relying on it being a causal no-op
+        ctx = flash_attention(q, k, v, dims._replace(window=None))
     b, s = x.shape[:2]
     ctx = ctx.reshape(b, s, dims.n_heads * dims.head_dim)
     return linear(params["wo"], ctx, imc, rng, site=f"{site_prefix}.wo")
@@ -390,14 +397,25 @@ def _decode_attend(params, x, q, k, v, valid, dims: AttnDims, imc, rng,
 
 def _attention_decode_paged(params, x, cache, pos_b, dims: AttnDims, imc, rng,
                             active, site_prefix: str = "attn"):
-    """Paged decode: scatter the new K/V into the tail block, gather the
-    slot's K/V view through the block table.
+    """Paged decode: scatter the new K/V into the tail block and attend over
+    the block table.
+
+    Default path (``dims.paged_kernel``): the fused kernel in
+    ``repro.kernels.paged_attention`` walks the block table in-kernel,
+    streaming one physical block per step into an online-softmax accumulator
+    and scattering the new token inside the same kernel - the gathered
+    ``pool[bt]`` copy never exists.  Escape hatch (``cfg.decode_attn =
+    "gather"``): scatter, then materialize the gathered view and run a
+    full-row softmax (the reference math, kept selectable for debugging).
 
     Masked (invalid) lanes read garbage from unallocated blocks but contribute
-    exactly zero probability, so the gathered view reproduces the contiguous
-    layout token-for-token.  Rows with ``active == False`` write to garbage
-    block 0: a retired slot's stale table may point at physical blocks that
-    the allocator has already handed to another request.
+    exactly zero probability, so both paths reproduce the contiguous layout
+    token-for-token.  New-token writes follow the garbage-block-0 routing
+    contract (``paged_attention.write_routing``): rows with ``active ==
+    False`` (a retired slot's stale table may point at physical blocks the
+    allocator already handed to another request) AND rows whose position
+    overran the slot's capacity (clipping the logical block index would
+    clobber the slot's last LIVE block) write to garbage block 0.
     """
     assert dims.window is None, "paged KV caches are global-attention only"
     b = x.shape[0]
@@ -407,16 +425,22 @@ def _attention_decode_paged(params, x, cache, pos_b, dims: AttnDims, imc, rng,
     pk, pv, bt = cache["pk"], cache["pv"], cache["bt"]
     block = pk.shape[1]
     max_blocks = bt.shape[1]
-    rows = jnp.arange(b)
-    dest = bt[rows, jnp.clip(pos_b // block, 0, max_blocks - 1)]
-    if active is not None:
-        dest = jnp.where(active, dest, 0)
-    off = pos_b % block
+    hq, hkv, hd = dims.n_heads, dims.n_kv, dims.head_dim
+    if dims.paged_kernel:
+        g = hq // hkv
+        qg = q.reshape(b, hkv, g, hd)
+        ctx, pk, pv = paged_attention_decode(
+            qg, k_new[:, 0], v_new[:, 0], pk, pv, bt, pos_b, active,
+            scale=dims.scale, softcap=dims.softcap_val)
+        ctx = ctx.reshape(b, 1, hq * hd).astype(x.dtype)
+        y = linear(params["wo"], ctx, imc, rng, site=f"{site_prefix}.wo")
+        return y, {"pk": pk, "pv": pv, "bt": bt}
+    dest, off = write_routing(bt, pos_b, block, active)
     pk = pk.at[dest, off].set(k_new[:, 0].astype(pk.dtype))
     pv = pv.at[dest, off].set(v_new[:, 0].astype(pv.dtype))
     s_kv = max_blocks * block
-    k = ws(pk[bt].reshape(b, s_kv, dims.n_kv, dims.head_dim), "kv_bshd")
-    v = ws(pv[bt].reshape(b, s_kv, dims.n_kv, dims.head_dim), "kv_bshd")
+    k = ws(pk[bt].reshape(b, s_kv, hkv, hd), "kv_bshd")
+    v = ws(pv[bt].reshape(b, s_kv, hkv, hd), "kv_bshd")
     valid = jnp.arange(s_kv)[None, :] <= pos_b[:, None]
     y = _decode_attend(params, x, q, k, v, valid, dims, imc, rng, site_prefix)
     return y, {"pk": pk, "pv": pv, "bt": bt}

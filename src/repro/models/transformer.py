@@ -48,6 +48,7 @@ def attn_dims(cfg: ArchConfig, kind: str) -> attn_lib.AttnDims:
         kv_block=cfg.flash_kv_block,
         rope_theta=cfg.rope_theta,
         use_rope=cfg.pos_kind == "rope",
+        paged_kernel=cfg.decode_attn != "gather",
     )
 
 

@@ -34,8 +34,8 @@ def test_committed_bench_files_exist():
                          ids=[os.path.basename(p) for p in BENCH_FILES])
 def test_bench_schema(path):
     payload = _load(path)
-    assert payload["schema_version"] == 2.3
-    assert payload["schema"] == "repro-imc-bench/v2.3"
+    assert payload["schema_version"] == 2.4
+    assert payload["schema"] == "repro-imc-bench/v2.4"
     meta = payload["meta"]
     for key in REQUIRED_META:
         assert meta.get(key), f"meta.{key} missing/empty"
@@ -65,6 +65,37 @@ def test_bench_schema(path):
                 assert field in rec, \
                     f"{suite}: {rec['bench']} record missing {field!r} " \
                     f"(schema v2.3)"
+            # schema v2.4: engine-comparison serve records name their
+            # decode-attention path (also enforced by check_regression.py)
+            if rec.get("bench") == "serve":
+                assert rec.get("decode_attn"), \
+                    f"{suite}: serve record missing 'decode_attn' " \
+                    f"(schema v2.4)"
+
+
+def test_paged_attention_records_committed():
+    """The paged-attention decode bench is part of the committed kernel
+    baseline: the fused kernel's materialized KV working set is ONE block
+    (O(1) - independent of slot count and sequence length) while the gather
+    path copies the whole resident table, and the committed reduction ratio
+    equals slots * blocks exactly."""
+    payload = _load(os.path.join(ROOT, "BENCH_kernels.json"))
+    records = payload["suites"]["kernel"]["records"]
+    runs = [r for r in records if r["bench"] == "paged_attention"]
+    summaries = [r for r in records
+                 if r["bench"] == "paged_attention_summary"]
+    assert runs and summaries, "BENCH_kernels.json missing paged_attention"
+    for r in runs:
+        one_block = r["block_size"] * r["kv_heads"] * r["head_dim"] * 8
+        if r["config"] == "kernel":
+            assert r["gathered_kv_bytes_per_step"] == one_block
+        else:
+            assert r["gathered_kv_bytes_per_step"] == \
+                r["slots"] * r["blocks"] * one_block
+    for s in summaries:
+        assert s["gathered_kv_reduction"] == s["slots"] * s["blocks"]
+        assert s["gathered_kv_bytes_after"] == \
+            s["block_size"] * s["kv_heads"] * s["head_dim"] * 8
 
 
 def test_serve_drift_record_committed():

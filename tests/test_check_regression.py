@@ -14,13 +14,14 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def _payload():
     return {
-        "schema_version": 2.1,
+        "schema_version": 2.4,
         "suites": {
             "serve": {
                 "wall_s": 1.0,
                 "records": [
                     {"bench": "serve", "config": "paged_engine",
                      "mode": "digital", "substrate": "digital", "slots": 4,
+                     "decode_attn": "kernel",
                      "tok_s": 2700.0, "wall_s": 0.02,
                      "kv_bytes_per_active_token": 1212.8,
                      "prefill_calls": 6, "decode_steps": 14},
@@ -126,7 +127,7 @@ def test_new_current_records_allowed():
     cur = _payload()
     cur["suites"]["serve"]["records"].append(
         {"bench": "serve", "config": "new_engine", "mode": "digital",
-         "substrate": "digital", "slots": 4,
+         "substrate": "digital", "slots": 4, "decode_attn": "dense",
          "kv_bytes_per_active_token": 1.0})
     assert compare_payloads(_payload(), cur) == []
 
@@ -143,6 +144,20 @@ def test_missing_substrate_field_fails_with_clear_message():
     del base["suites"]["serve"]["records"][0]["substrate"]
     fails = compare_payloads(base, _payload())
     assert any(f.startswith("baseline:") for f in fails), fails
+
+
+def test_missing_decode_attn_field_fails_with_clear_message():
+    """Bench schema v2.4: an engine-comparison 'serve' record without its
+    'decode_attn' field must fail the gate with an actionable message."""
+    cur = _payload()
+    del cur["suites"]["serve"]["records"][0]["decode_attn"]
+    fails = compare_payloads(_payload(), cur)
+    assert any("missing its 'decode_attn' field" in f and "v2.4" in f
+               and "regenerate" in f for f in fails), fails
+    # summary/energy records are exempt: only bench == "serve" carries it
+    cur = _payload()
+    fails = compare_payloads(_payload(), cur)
+    assert fails == []
 
 
 def test_substrate_value_change_is_identity_change():
