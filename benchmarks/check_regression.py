@@ -23,19 +23,29 @@ A baseline record missing from the current run is a failure (a silently
 dropped bench is exactly the "stale artifact" failure mode this gate
 exists for); extra current records are allowed (new benches land first).
 
-Bench schema v2.4: serve-suite records must carry a ``substrate`` field
+Bench schema v2.5: serve-suite records must carry a ``substrate`` field
 naming the Substrate they ran on / billed (since v2.1), ``serve_drift``
 records must carry the full drift-report surface (detection, swap and
 recovery fields - since v2.2), ``serve_slo`` records must carry the
 overload scoreboard (goodput, latency percentiles, shed/preempt/degrade
-counters, engine_deaths, conservation - since v2.3), and engine-comparison
+counters, engine_deaths, conservation - since v2.3), engine-comparison
 ``serve`` records must carry a ``decode_attn`` field naming the decode
 attention path they ran ("kernel" / "gather" for the paged engine, "dense"
-for the contiguous/wave baselines - new in v2.4, alongside the
+for the contiguous/wave baselines - since v2.4, alongside the
 ``paged_attention`` kernel bench whose ``gathered_kv_bytes_*`` counters pin
-the gathered-KV copy eliminated);
+the gathered-KV copy eliminated), and ``serve_sharded`` records must pin
+the tensor-parallel engine (new in v2.5): ``mesh_shape``/``devices`` are
+identity fields, ``kv_bytes_per_device`` / ``kv_bytes_total`` /
+``kv_shard_ways`` are structural (shape-derived) and gate exactly,
+``token_match`` (sharded greedy tokens == single-device) gates exactly,
+and ``scaling_tok_s_ratio`` gates on a generous absolute floor
+(host-simulated devices share one physical CPU);
 :func:`validate_schema` fails either side of a pair with a clear message
 when any of it is missing.
+
+``--suites`` restricts a comparison to a comma list of suites on BOTH
+sides - e.g. the distributed CI job produces only the ``serve_sharded``
+suite and gates it against the full committed ``BENCH_serve.json``.
 """
 from __future__ import annotations
 
@@ -54,6 +64,7 @@ ID_FIELDS = (
     "policy", "alloc", "degrade", "workload_seed", "overload", "arrival",
     "kv_blocks",
     "blocks", "block_size", "heads", "kv_heads", "head_dim", "decode_attn",
+    "mesh_shape", "devices",
 )
 
 # bench schema v2.1: every serve-suite record must name the execution
@@ -203,6 +214,17 @@ RULES: Dict[str, Tuple[str, float]] = {
     "pool_util_gain": ("min_abs", 0.01),
     "engine_deaths": ("max_abs", 0.0),
     "conserved": ("exact_str", 0.0),
+    # tensor-parallel sharded serve (schema v2.5): per-device KV bytes and
+    # the head-shard arity are deterministic functions of the shapes ->
+    # exact; the greedy-token match with the single-device engine IS the
+    # correctness invariant; the tok/s scaling ratio vs 1 device only gets
+    # an absolute floor (host-simulated mesh devices share one physical
+    # CPU, so "sharding didn't collapse throughput" is all that transfers)
+    "kv_bytes_per_device": ("exact", 0.0),
+    "kv_bytes_total": ("exact", 0.0),
+    "kv_shard_ways": ("exact", 0.0),
+    "token_match": ("exact_str", 0.0),
+    "scaling_tok_s_ratio": ("min_abs", 0.05),
 }
 
 # drift records must carry the full report surface: a record that says
@@ -223,6 +245,15 @@ SLO_REQUIRED_FIELDS = (
 SLO_SUMMARY_REQUIRED_FIELDS = (
     "substrate", "workload_seed", "goodput_ratio", "pool_util_gain",
     "preempt_count", "engine_deaths", "conserved",
+)
+
+# serve_sharded records must pin the tensor-parallel engine (schema v2.5):
+# the mesh identity, the structural per-device KV bytes, the greedy-token
+# match with the single-device engine, and the tok/s scaling ratio
+SHARDED_REQUIRED_FIELDS = (
+    "substrate", "mesh_shape", "devices", "decode_attn",
+    "scaling_tok_s_ratio", "kv_bytes_per_device", "kv_bytes_total",
+    "kv_shard_ways", "token_match",
 )
 
 
@@ -323,6 +354,16 @@ def validate_schema(payload: dict, label: str) -> List[str]:
                         f"{missing} (required since bench schema v2.3: an "
                         f"SLO record must carry the full overload "
                         f"scoreboard)")
+            if bench == "serve_sharded":
+                missing = [f for f in SHARDED_REQUIRED_FIELDS if f not in rec]
+                if missing:
+                    failures.append(
+                        f"{label}: serve_sharded record {ident} is missing "
+                        f"{missing} (required since bench schema v2.5: a "
+                        f"sharded-serve record must pin the mesh identity, "
+                        f"per-device KV bytes, token match and tok/s "
+                        f"scaling - regenerate the artifact with "
+                        f"benchmarks/run.py)")
     return failures
 
 
@@ -363,11 +404,27 @@ def compare_payloads(baseline: dict, current: dict) -> List[str]:
     return failures
 
 
-def check_pair(baseline_path: str, current_path: str) -> List[str]:
+def filter_suites(payload: dict, suites) -> dict:
+    """A shallow copy of ``payload`` keeping only the named suites (applied
+    to BOTH sides of a pair: a job that produces one suite can gate it
+    against a baseline that carries several)."""
+    keep = set(suites)
+    out = dict(payload)
+    out["suites"] = {name: body
+                     for name, body in payload.get("suites", {}).items()
+                     if name in keep}
+    return out
+
+
+def check_pair(baseline_path: str, current_path: str,
+               suites=None) -> List[str]:
     with open(baseline_path) as f:
         baseline = json.load(f)
     with open(current_path) as f:
         current = json.load(f)
+    if suites is not None:
+        baseline = filter_suites(baseline, suites)
+        current = filter_suites(current, suites)
     return [f"[{baseline_path} vs {current_path}] {m}"
             for m in compare_payloads(baseline, current)]
 
@@ -377,13 +434,19 @@ def main(argv=None) -> int:
     ap.add_argument("--pair", action="append", required=True,
                     metavar="BASELINE:CURRENT",
                     help="baseline JSON : CI-produced JSON (repeatable)")
+    ap.add_argument("--suites", default=None, metavar="A,B",
+                    help="restrict every pair to this comma list of suites "
+                         "(both sides; a partial CI run gates only what it "
+                         "produced)")
     args = ap.parse_args(argv)
+    suites = set(args.suites.split(",")) if args.suites else None
     failures: List[str] = []
     for pair in args.pair:
         baseline_path, _, current_path = pair.partition(":")
         if not current_path:
             ap.error(f"--pair wants BASELINE:CURRENT, got {pair!r}")
-        failures.extend(check_pair(baseline_path, current_path))
+        failures.extend(check_pair(baseline_path, current_path,
+                                   suites=suites))
     if failures:
         print(f"BENCH REGRESSION: {len(failures)} failure(s)")
         for f in failures:

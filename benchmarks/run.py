@@ -31,7 +31,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig9,fig10,fig11,fig12,fig13,"
                          "pareto,layer_snr,model_energy,kernel,serve,"
-                         "serve_energy,roofline")
+                         "serve_energy,serve_sharded,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write a machine-readable JSON report")
     ap.add_argument("--workload-seed", type=int, default=None,
@@ -39,6 +39,11 @@ def main() -> None:
                          "(default: the committed baseline seed; every "
                          "serve_slo field is a deterministic draw-for-draw "
                          "function of this seed - no wall clock)")
+    ap.add_argument("--mesh", default=None, metavar="RxC",
+                    help="override the serve_sharded suite's device mesh "
+                         "(default: the committed baseline mesh, 1x4; the "
+                         "suite runs in a child process that pins 8 "
+                         "host-simulated devices regardless of the parent)")
     args = ap.parse_args()
     if args.json:
         json_dir = os.path.dirname(os.path.abspath(args.json)) or "."
@@ -52,6 +57,8 @@ def main() -> None:
 
     if args.workload_seed is not None:
         serve_bench.SLO_SEED = args.workload_seed
+    if args.mesh is not None:
+        serve_bench.SHARDED_MESH = args.mesh
 
     suites = {}
     suites.update(FIG_BENCHES)
@@ -65,6 +72,10 @@ def main() -> None:
     #       --json BENCH_energy.json
     suites["serve_energy"] = lambda: serve_bench.energy_rows(
         serve_bench.energy_records())
+    # multi-device scaling suite: runs in a child process that pins 8 host
+    # devices, so it works (and gates) under any parent device count
+    suites["serve_sharded"] = lambda: serve_bench.sharded_rows(
+        serve_bench.sharded_records())
     suites["roofline"] = roofline.run
     # suites with structured records: run once, derive the CSV rows from them
     record_fns = {"kernel": (kernel_bench.bench_records,
@@ -72,25 +83,33 @@ def main() -> None:
                   "serve": (serve_bench.bench_records,
                             serve_bench.rows_from_records),
                   "serve_energy": (serve_bench.energy_records,
-                                   serve_bench.energy_rows)}
+                                   serve_bench.energy_rows),
+                  "serve_sharded": (serve_bench.sharded_records,
+                                    serve_bench.sharded_rows)}
 
     only = set(args.only.split(",")) if args.only else None
     if only and "serve" in only:
-        # the serve bench surface reports energy too: selecting the serve
-        # suite pulls in the (memoized, deterministic) serve_energy rollup
+        # the serve bench surface reports energy + multi-device scaling too:
+        # selecting the serve suite pulls in the (deterministic) serve_energy
+        # rollup and the subprocess-isolated serve_sharded comparison, so the
+        # committed BENCH_serve.json always carries all three suites
         only.add("serve_energy")
-    # schema v2.4: serve-suite records name the execution substrate they
+        only.add("serve_sharded")
+    # schema v2.5: serve-suite records name the execution substrate they
     # ran/billed (since v2.1), serve_drift records carry the full
     # detection/swap/recovery report surface (since v2.2), serve_slo
     # records carry the overload scoreboard - goodput, TTFT/ITL percentiles,
     # shed/preempt/degrade counters, engine_deaths, conservation - for the
-    # committed seeded 2x-overload scenario (since v2.3), and engine
+    # committed seeded 2x-overload scenario (since v2.3), engine
     # "serve" records name their decode-attention path (kernel/gather/
-    # dense) alongside the paged_attention kernel bench records (new in
-    # v2.4; all enforced by check_regression.py)
+    # dense) alongside the paged_attention kernel bench records (since
+    # v2.4), and serve_sharded records pin the tensor-parallel engine:
+    # mesh_shape/devices identity, per-device KV bytes (structural-exact),
+    # greedy-token match with the single-device engine, and a tok/s scaling
+    # floor (new in v2.5; all enforced by check_regression.py)
     payload = {
-        "schema": "repro-imc-bench/v2.4",
-        "schema_version": 2.4,
+        "schema": "repro-imc-bench/v2.5",
+        "schema_version": 2.5,
         "backend": jax.default_backend(),
         # machine/XLA provenance: lets the regression gate (and humans) tell
         # a real perf change from a toolchain change, and the schema test

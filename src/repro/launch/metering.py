@@ -92,8 +92,23 @@ class DPMeter:
         self.shed_requests = 0
         self.preemptions = 0
         self.substrate_swaps = 0
+        # tensor-parallel provenance: the sharded engine stamps its mesh and
+        # per-device KV pool capacity so energy/bench rollups can report the
+        # per-device footprint next to the billed work
+        self.mesh_shape: Optional[str] = None
+        self.mesh_devices = 1
+        self.kv_pool_bytes_per_device = 0
 
     # -- engine hook points ---------------------------------------------------
+    def note_mesh(self, mesh_shape: Optional[str], devices: int,
+                  kv_pool_bytes_per_device: int = 0):
+        """The engine serves over a device mesh: record its ``RxC`` shape,
+        device count, and structural per-device KV pool capacity (head-sharded
+        pools carry 1/model_axis of the bytes on each device)."""
+        self.mesh_shape = mesh_shape
+        self.mesh_devices = devices
+        self.kv_pool_bytes_per_device = kv_pool_bytes_per_device
+
     def note_shadow_sample(self):
         """One chunk / prefill group ran with shadow calibration recording."""
         self.shadow_samples += 1

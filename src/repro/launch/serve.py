@@ -135,9 +135,20 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.core import substrate as substrate_lib
+from repro.launch.mesh import axis_size, dp_axes
+from repro.launch.sharding import (
+    activation_rules,
+    axis_rules,
+    fallback_replicate,
+    kv_head_partition,
+    tree_param_specs,
+    tree_shardings,
+    validate_divisibility,
+)
 from repro.models import decode_step, init_paged_cache, init_params, prefill
 from repro.runtime import drift as drift_lib
 from repro.runtime import fault as fault_lib
@@ -306,7 +317,18 @@ class Engine:
                  drift_monitor: Optional[drift_lib.DriftMonitor] = None,
                  failure_injector: Optional[Callable[[str, Any], None]] = None,
                  alloc_policy: str = "lazy", clock=None,
-                 drift_pause_depth: Optional[int] = None):
+                 drift_pause_depth: Optional[int] = None, mesh=None):
+        # tensor-parallel serving: a (data=1, model=N) mesh shards the
+        # weights (path-based param specs) and the paged KV pools (heads
+        # over ``model``); None = the classic single-device engine
+        self.mesh = mesh
+        self.tp = axis_size(mesh, "model") if mesh is not None else 1
+        if self.tp > 1 and cfg.decode_attn == "kernel":
+            # per-shard Pallas paged-attention dispatch is out of scope: the
+            # sharded engine serves through the gather reference path
+            log.info("model-parallel mesh (%d-way): decode_attn='kernel' "
+                     "falls back to the gather path under sharding", self.tp)
+            cfg = cfg.replace(decode_attn="gather")
         self.cfg = cfg
         self.params = params
         # the first-class execution substrate every matmul routes through
@@ -391,6 +413,17 @@ class Engine:
         self.last_token = jnp.zeros((batch_slots,), jnp.int32)
         self.finished: List[Request] = []
 
+        # sharded placement (no-op on the single-device engine): params get
+        # their TP specs, KV pools get head-sharded iff Hkv divides the
+        # model axis (else replicated - the partition helper refuses uneven
+        # splits), and everything else replicates
+        self._rules = None
+        self._cache_shardings = None
+        self._rep_sharding = None
+        self.kv_shard = False
+        if self.tp > 1:
+            self._init_sharding()
+
         # perf counters (consumed by benchmarks/serve_bench.py)
         self.decode_calls = 0
         self.decode_steps = 0
@@ -417,9 +450,89 @@ class Engine:
         # no recompile storms on either axis
         self._prefill_fns: Dict[Tuple[int, int, bool, Any], Any] = {}
         self._decode_fns: Dict[Tuple[int, bool, Any], Any] = {}
-        self._insert_fn = jax.jit(self._insert_impl)
-        self._extend_fn = jax.jit(self._extend_impl)
+        if self.tp > 1:
+            rep = self._rep_sharding
+            self._insert_fn = self._with_rules(jax.jit(
+                self._insert_impl,
+                out_shardings=(self._cache_shardings, rep, rep)))
+            self._extend_fn = self._with_rules(jax.jit(
+                self._extend_impl, out_shardings=self._cache_shardings))
+        else:
+            self._insert_fn = jax.jit(self._insert_impl)
+            self._extend_fn = jax.jit(self._extend_impl)
         self._block_bytes, self._fixed_kv_bytes = self._kv_accounting()
+        # per-device KV footprint: head-sharded pool/ring leaves split their
+        # bytes over the model axis; the block tables and everything else
+        # replicate (the allocator is whole per shard group)
+        div = self.tp if self.kv_shard else 1
+        self._block_bytes_per_device = self._block_bytes // div
+        self._fixed_kv_bytes_per_device = self._fixed_kv_bytes // div
+        if meter is not None and self.mesh is not None:
+            meter.note_mesh(self.mesh_shape, self.mesh.devices.size,
+                            self.kv_pool_bytes_per_device())
+
+    # -- tensor-parallel placement --------------------------------------------
+    def _init_sharding(self):
+        mesh = self.mesh
+        hkv = self.cfg.n_kv_heads
+        self.kv_shard = self.has_paged and hkv % self.tp == 0
+        if self.kv_shard:
+            # contract: contiguous per-shard-group head ranges (no loss, no
+            # overlap); raises - instead of padding - on uneven splits
+            kv_head_partition(hkv, self.tp)
+        elif self.has_paged:
+            log.info("KV pools replicated: %d KV heads do not divide the "
+                     "%d-way model axis", hkv, self.tp)
+        rules = activation_rules(mesh)
+        dp = dp_axes(mesh)
+        rules["paged_kv_bshd"] = (
+            P(dp, None, "model", None) if self.kv_shard else P())
+        self._rules = rules
+        self._rep_sharding = NamedSharding(mesh, P())
+
+        specs = tree_param_specs(self.params)
+        issues = validate_divisibility(self.params, specs, mesh)
+        if issues:
+            log.info("serve TP: replicating %d param tensor(s) whose "
+                     "sharded dims do not divide the mesh", len(issues))
+            specs = fallback_replicate(specs, {p for p, _, _ in issues})
+        self.params = jax.device_put(self.params, tree_shardings(mesh, specs))
+
+        def cache_spec(path, leaf):
+            name = str(getattr(path[-1], "key", ""))
+            if name in ("pk", "pv", "k", "v") and self.kv_shard:
+                # (..., block/seq, Hkv, hd): heads ride the model axis
+                entries = [None] * leaf.ndim
+                entries[-2] = "model"
+                return P(*entries)
+            return P()  # block tables, recurrent states, positions
+
+        cache_specs = jax.tree_util.tree_map_with_path(cache_spec, self.cache)
+        self._cache_shardings = tree_shardings(mesh, cache_specs)
+        self.cache = jax.device_put(self.cache, self._cache_shardings)
+        self.pos = jax.device_put(self.pos, self._rep_sharding)
+        self.last_token = jax.device_put(self.last_token, self._rep_sharding)
+
+    def _with_rules(self, fn):
+        """Bind the engine's logical-axis rules around a jitted callable so
+        every ``ws``/``ws_attn`` annotation resolves at trace time (identity
+        on the single-device engine)."""
+        if self._rules is None:
+            return fn
+        mesh, rules = self.mesh, self._rules
+
+        def call(*args, **kwargs):
+            with axis_rules(mesh, rules):
+                return fn(*args, **kwargs)
+
+        return call
+
+    @property
+    def mesh_shape(self) -> Optional[str]:
+        """The mesh as an ``RxC`` string ("1x4"), None when single-device."""
+        if self.mesh is None:
+            return None
+        return f"{axis_size(self.mesh, 'data')}x{axis_size(self.mesh, 'model')}"
 
     # -- kv memory accounting --------------------------------------------------
     def _kv_accounting(self) -> Tuple[int, int]:
@@ -451,6 +564,24 @@ class Engine:
         """Bytes of KV memory currently backing live tokens: allocated blocks
         across every paged layer plus the fixed ring caches."""
         return self._fixed_kv_bytes + self.alloc.used_count * self._block_bytes
+
+    def kv_pool_bytes(self) -> int:
+        """Whole-pool KV capacity in bytes (a pure function of shapes)."""
+        return (self._fixed_kv_bytes
+                + self.alloc.num_blocks * self._block_bytes)
+
+    def kv_pool_bytes_per_device(self) -> int:
+        """Per-device whole-pool KV capacity: head-sharded pools carry
+        ``1/model_axis`` of the bytes per device; replicated pools carry all
+        of them.  Structural (shape-derived), so the bench gate pins it
+        exactly."""
+        return (self._fixed_kv_bytes_per_device
+                + self.alloc.num_blocks * self._block_bytes_per_device)
+
+    def kv_bytes_in_use_per_device(self) -> int:
+        """Per-device bytes currently backing live tokens."""
+        return (self._fixed_kv_bytes_per_device
+                + self.alloc.used_count * self._block_bytes_per_device)
 
     def live_tokens(self) -> int:
         """Tokens currently resident in active slots' caches."""
@@ -721,7 +852,7 @@ class Engine:
             tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             return tok0, cache1
 
-        return jax.jit(pf)
+        return self._with_rules(jax.jit(pf))
 
     # -- multi-slot cache insert ----------------------------------------------
     def _insert_impl(self, cache, cache1, slot_vec, bt_rows, tok0, true_len,
@@ -1046,6 +1177,15 @@ class Engine:
             )
             return cache, tok, pos, toks.T  # (slots, T)
 
+        if self.tp > 1:
+            # the (slots, T) token block is REPLICATED (every shard holds the
+            # same argmax'd tokens), so the one-transfer-per-chunk contract
+            # survives sharding: nothing else crosses to the host.  The cache
+            # keeps its head-sharded placement across chunks.
+            rep = self._rep_sharding
+            return self._with_rules(jax.jit(
+                chunk,
+                out_shardings=(self._cache_shardings, rep, rep, rep)))
         return jax.jit(chunk)
 
     def decode_chunk(self, n_steps: Optional[int] = None) -> np.ndarray:
@@ -1325,6 +1465,12 @@ def main(argv=None):
                          "hatch that materializes pool[bt] each step.  Baked "
                          "into the engine cfg at construction (static at "
                          "trace time), so it cannot thrash the jit caches")
+    ap.add_argument("--mesh", default=None, metavar="RxC",
+                    help="serve over a (data, model) device mesh, e.g. 1x8: "
+                         "tensor-parallel weights + head-sharded paged KV "
+                         "pools (replicated pools when Hkv does not divide "
+                         "the model axis).  Needs R*C devices - on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
 
@@ -1396,11 +1542,22 @@ def main(argv=None):
         from repro.runtime.workload import VirtualClock
 
         clock = VirtualClock()
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh, parse_mesh_shape
+
+        try:
+            mesh = make_serve_mesh(*parse_mesh_shape(args.mesh))
+        except ValueError as e:
+            ap.error(str(e))
+        log.info("serving over a %s mesh (%d devices visible)", args.mesh,
+                 len(jax.devices()))
     engine = Engine(cfg, params, args.batch, cache_len, rng=rng,
                     max_chunk=args.chunk, block_size=args.block,
                     kv_blocks=args.kv_blocks, meter=meter,
                     drift_monitor=monitor, alloc_policy=args.alloc,
-                    clock=clock, drift_pause_depth=args.drift_pause_depth)
+                    clock=clock, drift_pause_depth=args.drift_pause_depth,
+                    mesh=mesh)
 
     if args.workload != "none":
         from repro.launch.metering import format_slo_summary, slo_summary

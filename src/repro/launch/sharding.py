@@ -197,6 +197,11 @@ def activation_rules(mesh: Mesh) -> Dict[str, P]:
         # decode KV cache (batch, seq, kv_heads, head_dim): sequence-sharded
         # over the model axis => distributed flash-decode softmax (DESIGN SS5)
         "kv_bshd": P(dp, mdl, None, None),
+        # paged-pool gather view (batch, seq, kv_heads, head_dim): HEAD-sharded
+        # to match the serve engine's head-sharded KV pools, so the pool[bt]
+        # gather stays local per shard (the serve engine overrides this to P()
+        # when Hkv does not divide the model axis and the pools are replicated)
+        "paged_kv_bshd": P(dp, None, mdl, None),
         # flash-attention internals (full-seq, heads on model)
         "attn_kv": P(dp, None, mdl, None),  # (B, S, Hkv, hd)
         "attn_q": P(dp, None, mdl, None, None),  # (B, S, Hkv, G, hd)
@@ -220,6 +225,29 @@ def activation_rules(mesh: Mesh) -> Dict[str, P]:
         "moe_td": P(mdl, None),
         "moe_ge": P(mdl, None),
     }
+
+
+def kv_head_partition(hkv: int, n: int) -> list:
+    """Per-shard-group KV head ranges for head-sharded paged pools.
+
+    Returns ``n`` contiguous ``(start, stop)`` half-open ranges partitioning
+    ``range(hkv)``: every head lands in exactly one shard group (no loss, no
+    overlap; hypothesis-pinned in tests/test_serve_sharded.py).  The block
+    table and BlockAllocator stay WHOLE per shard group - only the head axis
+    of the ``(num_blocks, block, Hkv, hd)`` pools is split.
+
+    Raises ValueError when ``hkv`` does not divide evenly over ``n`` shards:
+    uneven head padding would silently change per-device KV accounting, so
+    callers must fall back to replicated pools explicitly instead.
+    """
+    if n < 1 or hkv < 1:
+        raise ValueError(f"need hkv >= 1 and n >= 1, got hkv={hkv}, n={n}")
+    if hkv % n != 0:
+        raise ValueError(
+            f"{hkv} KV heads do not partition over {n} shard groups "
+            f"({hkv} % {n} != 0); replicate the pools instead")
+    per = hkv // n
+    return [(i * per, (i + 1) * per) for i in range(n)]
 
 
 # ---------------------------------------------------------------------------

@@ -439,8 +439,11 @@ def _attention_decode_paged(params, x, cache, pos_b, dims: AttnDims, imc, rng,
     pk = pk.at[dest, off].set(k_new[:, 0].astype(pk.dtype))
     pv = pv.at[dest, off].set(v_new[:, 0].astype(pv.dtype))
     s_kv = max_blocks * block
-    k = ws(pk[bt].reshape(b, s_kv, hkv, hd), "kv_bshd")
-    v = ws(pv[bt].reshape(b, s_kv, hkv, hd), "kv_bshd")
+    # head-sharded logical name: the pools themselves are head-sharded under
+    # the tensor-parallel serve engine, so the gathered view must keep heads
+    # on the model axis (sequence-sharding here would all-to-all every step)
+    k = ws(pk[bt].reshape(b, s_kv, hkv, hd), "paged_kv_bshd")
+    v = ws(pv[bt].reshape(b, s_kv, hkv, hd), "paged_kv_bshd")
     valid = jnp.arange(s_kv)[None, :] <= pos_b[:, None]
     y = _decode_attend(params, x, q, k, v, valid, dims, imc, rng, site_prefix)
     return y, {"pk": pk, "pv": pv, "bt": bt}

@@ -8,6 +8,7 @@ import pytest
 
 from benchmarks.check_regression import (
     DRIFT_REQUIRED_FIELDS,
+    SHARDED_REQUIRED_FIELDS,
     SLO_REQUIRED_FIELDS,
     SLO_SUMMARY_REQUIRED_FIELDS,
     SUBSTRATE_REQUIRED_PREFIXES,
@@ -34,8 +35,8 @@ def test_committed_bench_files_exist():
                          ids=[os.path.basename(p) for p in BENCH_FILES])
 def test_bench_schema(path):
     payload = _load(path)
-    assert payload["schema_version"] == 2.4
-    assert payload["schema"] == "repro-imc-bench/v2.4"
+    assert payload["schema_version"] == 2.5
+    assert payload["schema"] == "repro-imc-bench/v2.5"
     meta = payload["meta"]
     for key in REQUIRED_META:
         assert meta.get(key), f"meta.{key} missing/empty"
@@ -71,6 +72,14 @@ def test_bench_schema(path):
                 assert rec.get("decode_attn"), \
                     f"{suite}: serve record missing 'decode_attn' " \
                     f"(schema v2.4)"
+            # schema v2.5: tensor-parallel serve records pin the mesh
+            # identity, the per-device KV footprint and the greedy-token
+            # match (also enforced by check_regression.py)
+            if rec.get("bench") == "serve_sharded":
+                for field in SHARDED_REQUIRED_FIELDS:
+                    assert field in rec, \
+                        f"{suite}: serve_sharded record missing {field!r} " \
+                        f"(schema v2.5)"
 
 
 def test_paged_attention_records_committed():
@@ -137,6 +146,32 @@ def test_serve_slo_records_committed():
     assert summary["preempt_count"] >= 1
     assert summary["engine_deaths"] == 0
     assert summary["conserved"] is True
+
+
+def test_serve_sharded_records_committed():
+    """The tensor-parallel engine comparison is part of the committed serve
+    baseline: the 1x4 mesh head-shards the smoke model's 4 KV heads (one per
+    device, so per-device pool bytes are exactly total/4), the kernel decode
+    path fell back to gather, and the sharded engine produced greedy tokens
+    identical to the single-device engine on every substrate."""
+    payload = _load(os.path.join(ROOT, "BENCH_serve.json"))
+    recs = [r for r in payload["suites"]["serve_sharded"]["records"]
+            if r["bench"] == "serve_sharded"]
+    assert len(recs) >= 2, "BENCH_serve.json is missing serve_sharded runs"
+    substrates = {r["substrate"] for r in recs}
+    assert "digital" in substrates
+    assert any(s.startswith("imc") for s in substrates)
+    for r in recs:
+        assert r["mesh_shape"] == "1x4"
+        assert r["devices"] == 8
+        assert r["decode_attn"] == "gather"
+        assert r["token_match"] is True
+        assert r["scaling_tok_s_ratio"] >= 0.05
+        assert r["kv_shard_ways"] == 4
+        # musicgen smoke is fully paged (no contiguous rings): the pool
+        # bytes split exactly over the shard groups
+        assert r["kv_bytes_per_device"] * r["kv_shard_ways"] == \
+            r["kv_bytes_total"]
 
 
 def _energy_records():

@@ -7,15 +7,33 @@ import os
 
 import pytest
 
-from benchmarks.check_regression import check_pair, compare_payloads, main
+from benchmarks.check_regression import (
+    check_pair,
+    compare_payloads,
+    filter_suites,
+    main,
+)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _payload():
     return {
-        "schema_version": 2.4,
+        "schema_version": 2.5,
         "suites": {
+            "serve_sharded": {
+                "wall_s": 30.0,
+                "records": [
+                    {"bench": "serve_sharded", "config": "tp_engine",
+                     "mode": "digital", "substrate": "digital",
+                     "decode_attn": "gather", "mesh_shape": "1x4",
+                     "devices": 8, "slots": 4, "requests": 8,
+                     "gen": 8, "tok_s_single": 90.0, "tok_s_sharded": 40.0,
+                     "scaling_tok_s_ratio": 0.44, "kv_shard_ways": 4,
+                     "kv_bytes_per_device": 83968, "kv_bytes_total": 335872,
+                     "token_match": True},
+                ],
+            },
             "serve": {
                 "wall_s": 1.0,
                 "records": [
@@ -167,6 +185,88 @@ def test_substrate_value_change_is_identity_change():
     cur["suites"]["serve"]["records"][2]["substrate"] = "imc_analytic"
     fails = compare_payloads(_payload(), cur)
     assert any("missing record" in f for f in fails)
+
+
+def _sharded(payload):
+    return payload["suites"]["serve_sharded"]["records"][0]
+
+
+def test_missing_sharded_field_fails_with_clear_message():
+    """Bench schema v2.5: a serve_sharded record without its mesh/KV/token
+    pinning fields must fail the gate with an actionable message."""
+    for field in ("mesh_shape", "kv_bytes_per_device", "token_match"):
+        cur = _payload()
+        del _sharded(cur)[field]
+        fails = compare_payloads(_payload(), cur)
+        assert any(f"'{field}'" in f or f"['{field}']" in f
+                   for f in fails), (field, fails)
+        assert any("v2.5" in f and "regenerate" in f for f in fails), fails
+
+
+def test_mesh_shape_change_is_identity_change():
+    """'mesh_shape' (and 'devices') are ID fields: changing the mesh reads
+    as a dropped baseline record, not metric drift on the same record."""
+    cur = _payload()
+    _sharded(cur)["mesh_shape"] = "1x8"
+    fails = compare_payloads(_payload(), cur)
+    assert any("missing record" in f for f in fails), fails
+
+
+def test_sharded_structural_kv_bytes_gate_exactly():
+    cur = _payload()
+    _sharded(cur)["kv_bytes_per_device"] += 8
+    fails = compare_payloads(_payload(), cur)
+    assert any("kv_bytes_per_device" in f and "exact" in f
+               for f in fails), fails
+
+
+def test_sharded_token_match_flip_fails():
+    cur = _payload()
+    _sharded(cur)["token_match"] = False
+    fails = compare_payloads(_payload(), cur)
+    assert any("token_match" in f for f in fails), fails
+
+
+def test_sharded_scaling_gates_on_absolute_floor():
+    # host-simulated devices share one CPU: the ratio only has to clear the
+    # collapse floor, not track the committed value
+    cur = _payload()
+    _sharded(cur)["scaling_tok_s_ratio"] = 0.06  # noisy but >= 0.05: ok
+    assert compare_payloads(_payload(), cur) == []
+    _sharded(cur)["scaling_tok_s_ratio"] = 0.01  # < floor
+    fails = compare_payloads(_payload(), cur)
+    assert any("scaling_tok_s_ratio" in f and "floor" in f
+               for f in fails), fails
+
+
+def test_filter_suites_gates_only_named_suites():
+    """--suites lets a job that produced ONE suite gate it against a
+    baseline artifact that carries several (the distributed-smoke job
+    checks serve_sharded alone against the full BENCH_serve.json)."""
+    cur = _payload()
+    del cur["suites"]["serve"]  # job only produced serve_sharded
+    # unfiltered: the missing serve suite fails the pair
+    assert any("suite missing" in f for f in compare_payloads(_payload(), cur))
+    # filtered to serve_sharded on both sides: passes
+    assert compare_payloads(filter_suites(_payload(), ["serve_sharded"]),
+                            filter_suites(cur, ["serve_sharded"])) == []
+    # and a real regression inside the kept suite still gates
+    _sharded(cur)["token_match"] = False
+    fails = compare_payloads(filter_suites(_payload(), ["serve_sharded"]),
+                             filter_suites(cur, ["serve_sharded"]))
+    assert any("token_match" in f for f in fails), fails
+
+
+def test_cli_suites_flag(tmp_path):
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    base.write_text(json.dumps(_payload()))
+    partial = _payload()
+    del partial["suites"]["serve"]
+    cur.write_text(json.dumps(partial))
+    assert main(["--pair", f"{base}:{cur}"]) == 1
+    assert main(["--suites", "serve_sharded",
+                 "--pair", f"{base}:{cur}"]) == 0
 
 
 @pytest.mark.parametrize("path", sorted(glob.glob(
