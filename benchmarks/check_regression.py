@@ -23,7 +23,7 @@ A baseline record missing from the current run is a failure (a silently
 dropped bench is exactly the "stale artifact" failure mode this gate
 exists for); extra current records are allowed (new benches land first).
 
-Bench schema v2.5: serve-suite records must carry a ``substrate`` field
+Bench schema v2.6: serve-suite records must carry a ``substrate`` field
 naming the Substrate they ran on / billed (since v2.1), ``serve_drift``
 records must carry the full drift-report surface (detection, swap and
 recovery fields - since v2.2), ``serve_slo`` records must carry the
@@ -39,7 +39,14 @@ identity fields, ``kv_bytes_per_device`` / ``kv_bytes_total`` /
 ``kv_shard_ways`` are structural (shape-derived) and gate exactly,
 ``token_match`` (sharded greedy tokens == single-device) gates exactly,
 and ``scaling_tok_s_ratio`` gates on a generous absolute floor
-(host-simulated devices share one physical CPU);
+(host-simulated devices share one physical CPU), and ``serve_prefix``
+records must pin the prefix-sharing paged KV cache (new in v2.6): the
+hit/CoW/eviction counters and billed-token tallies are deterministic
+functions of the seeded shared-system-prompt schedule and gate exactly,
+``token_match`` (warm greedy tokens == cold-cache run) gates exactly, and
+the billed-prefill-energy saving (``saved_prefill_j`` /
+``j_per_token_saved`` at the committed QR design point) gates with the
+same relative tolerance as the other deterministic energy rollups;
 :func:`validate_schema` fails either side of a pair with a clear message
 when any of it is missing.
 
@@ -65,6 +72,7 @@ ID_FIELDS = (
     "kv_blocks",
     "blocks", "block_size", "heads", "kv_heads", "head_dim", "decode_attn",
     "mesh_shape", "devices",
+    "prefix_len", "prefix_dup",
 )
 
 # bench schema v2.1: every serve-suite record must name the execution
@@ -225,6 +233,27 @@ RULES: Dict[str, Tuple[str, float]] = {
     "kv_shard_ways": ("exact", 0.0),
     "token_match": ("exact_str", 0.0),
     "scaling_tok_s_ratio": ("min_abs", 0.05),
+    # prefix-sharing paged KV (schema v2.6): every counter is a pure
+    # function of the seeded shared-system-prompt schedule -> exact (incl.
+    # hit_rate, a rounded ratio of exact counters); the energy-side fields
+    # are deterministic rollups and share the 2% numeric-jitter tolerance
+    # (the ">0 hits / >0 J saved" acceptance floors are pinned against the
+    # committed artifact by tests/test_bench_schema.py)
+    "prefix_lookups": ("exact", 0.0),
+    "prefix_hits": ("exact", 0.0),
+    "hit_rate": ("exact", 0.0),
+    "prefix_hit_tokens": ("exact", 0.0),
+    "saved_billed_tokens": ("exact", 0.0),
+    "cow_copies": ("exact", 0.0),
+    "prefix_evictions": ("exact", 0.0),
+    "cached_blocks": ("exact", 0.0),
+    "prefill_rows_cold": ("exact", 0.0),
+    "prefill_tokens_cold": ("exact", 0.0),
+    "kv_bytes_per_active_token_cold": ("rel", 0.05),
+    "prefill_j_cold": ("rel", 0.02),
+    "j_per_token_cold": ("rel", 0.02),
+    "saved_prefill_j": ("rel", 0.02),
+    "j_per_token_saved": ("rel", 0.02),
 }
 
 # drift records must carry the full report surface: a record that says
@@ -254,6 +283,18 @@ SHARDED_REQUIRED_FIELDS = (
     "substrate", "mesh_shape", "devices", "decode_attn",
     "scaling_tok_s_ratio", "kv_bytes_per_device", "kv_bytes_total",
     "kv_shard_ways", "token_match",
+)
+
+# serve_prefix records must pin the prefix-sharing cache (schema v2.6):
+# the workload identity, the hit/CoW/eviction counters, the warm-vs-cold
+# greedy-token match, and the billed-prefill-energy saving
+PREFIX_REQUIRED_FIELDS = (
+    "substrate", "prefix_len", "prefix_dup", "workload_seed",
+    "prefix_lookups", "prefix_hits", "hit_rate", "prefix_hit_tokens",
+    "saved_billed_tokens", "cow_copies", "prefix_evictions",
+    "cached_blocks", "token_match", "kv_bytes_per_active_token",
+    "j_per_token", "j_per_token_cold", "saved_prefill_j",
+    "j_per_token_saved",
 )
 
 
@@ -364,6 +405,16 @@ def validate_schema(payload: dict, label: str) -> List[str]:
                         f"per-device KV bytes, token match and tok/s "
                         f"scaling - regenerate the artifact with "
                         f"benchmarks/run.py)")
+            if bench == "serve_prefix":
+                missing = [f for f in PREFIX_REQUIRED_FIELDS if f not in rec]
+                if missing:
+                    failures.append(
+                        f"{label}: serve_prefix record {ident} is missing "
+                        f"{missing} (required since bench schema v2.6: a "
+                        f"prefix-sharing record must pin the workload "
+                        f"identity, hit/CoW/eviction counters, warm-vs-cold "
+                        f"token match and the billed-prefill-energy saving "
+                        f"- regenerate the artifact with benchmarks/run.py)")
     return failures
 
 

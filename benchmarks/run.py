@@ -31,7 +31,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig9,fig10,fig11,fig12,fig13,"
                          "pareto,layer_snr,model_energy,kernel,serve,"
-                         "serve_energy,serve_sharded,roofline")
+                         "serve_energy,serve_sharded,serve_prefix,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write a machine-readable JSON report")
     ap.add_argument("--workload-seed", type=int, default=None,
@@ -76,6 +76,11 @@ def main() -> None:
     # devices, so it works (and gates) under any parent device count
     suites["serve_sharded"] = lambda: serve_bench.sharded_rows(
         serve_bench.sharded_records())
+    # prefix-sharing paged KV suite: warm (radix prefix cache) vs cold engine
+    # on identical seeded shared-system-prompt traffic; deterministic
+    # structural counters + billed-prefill-energy saving
+    suites["serve_prefix"] = lambda: serve_bench.rows_from_records(
+        serve_bench.prefix_records())
     suites["roofline"] = roofline.run
     # suites with structured records: run once, derive the CSV rows from them
     record_fns = {"kernel": (kernel_bench.bench_records,
@@ -85,17 +90,21 @@ def main() -> None:
                   "serve_energy": (serve_bench.energy_records,
                                    serve_bench.energy_rows),
                   "serve_sharded": (serve_bench.sharded_records,
-                                    serve_bench.sharded_rows)}
+                                    serve_bench.sharded_rows),
+                  "serve_prefix": (serve_bench.prefix_records,
+                                   serve_bench.rows_from_records)}
 
     only = set(args.only.split(",")) if args.only else None
     if only and "serve" in only:
-        # the serve bench surface reports energy + multi-device scaling too:
-        # selecting the serve suite pulls in the (deterministic) serve_energy
-        # rollup and the subprocess-isolated serve_sharded comparison, so the
-        # committed BENCH_serve.json always carries all three suites
+        # the serve bench surface reports energy + multi-device scaling +
+        # prefix sharing too: selecting the serve suite pulls in the
+        # (deterministic) serve_energy rollup, the subprocess-isolated
+        # serve_sharded comparison, and the serve_prefix warm-vs-cold
+        # comparison, so the committed BENCH_serve.json carries all four
         only.add("serve_energy")
         only.add("serve_sharded")
-    # schema v2.5: serve-suite records name the execution substrate they
+        only.add("serve_prefix")
+    # schema v2.6: serve-suite records name the execution substrate they
     # ran/billed (since v2.1), serve_drift records carry the full
     # detection/swap/recovery report surface (since v2.2), serve_slo
     # records carry the overload scoreboard - goodput, TTFT/ITL percentiles,
@@ -103,13 +112,17 @@ def main() -> None:
     # committed seeded 2x-overload scenario (since v2.3), engine
     # "serve" records name their decode-attention path (kernel/gather/
     # dense) alongside the paged_attention kernel bench records (since
-    # v2.4), and serve_sharded records pin the tensor-parallel engine:
+    # v2.4), serve_sharded records pin the tensor-parallel engine:
     # mesh_shape/devices identity, per-device KV bytes (structural-exact),
     # greedy-token match with the single-device engine, and a tok/s scaling
-    # floor (new in v2.5; all enforced by check_regression.py)
+    # floor (since v2.5), and serve_prefix records pin the prefix-sharing
+    # paged KV cache: exact hit/CoW/eviction counters, greedy-token identity
+    # with a cold-cache run, and the billed-prefill-energy saving at the
+    # committed QR design point (new in v2.6; all enforced by
+    # check_regression.py)
     payload = {
-        "schema": "repro-imc-bench/v2.5",
-        "schema_version": 2.5,
+        "schema": "repro-imc-bench/v2.6",
+        "schema_version": 2.6,
         "backend": jax.default_backend(),
         # machine/XLA provenance: lets the regression gate (and humans) tell
         # a real perf change from a toolchain change, and the schema test

@@ -903,6 +903,123 @@ def energy_records() -> List[dict]:
 
 
 # ---------------------------------------------------------------------------
+# prefix-sharing paged KV suite (shared-system-prompt traffic, warm vs cold)
+# ---------------------------------------------------------------------------
+
+PREFIX_LEN = 16  # shared system-prompt tokens: two full 8-token KV blocks
+PREFIX_DUP = 4  # requests sharing each system prompt on average
+PREFIX_REQUESTS = 12
+PREFIX_SEED = 0
+# digital + frozen imc_analytic: bit-identity across all three substrates
+# (incl. the ~30x-slower bitserial path) is pinned by
+# tests/test_prefix_cache.py; the bench keeps inside the CI budget
+PREFIX_MODES = (None, "imc_analytic")
+
+
+def _prefix_requests(cfg) -> List[Request]:
+    """The committed shared-system-prompt draw: ``runtime.workload`` builds
+    prompts, stop lengths and the per-class prefix pools from ONE seeded
+    stream; arrival times are dropped (``drive_engine`` serves open loop) and
+    rid order is kept, so the warm and cold engines see the identical
+    schedule and greedy outputs compare token for token."""
+    from repro.runtime.workload import WorkloadConfig, generate
+
+    wcfg = WorkloadConfig(n_requests=PREFIX_REQUESTS, seed=PREFIX_SEED,
+                          max_new=GEN, prefix_len=PREFIX_LEN,
+                          prefix_dup=PREFIX_DUP)
+    return [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
+                    stop_at=r.stop_at)
+            for r in generate(wcfg, cfg.vocab_size)]
+
+
+def _prefix_run(cfg, params, cache_len, enable):
+    """One serve pass over the shared-prefix workload: fresh engine + meter
+    (billing the full ``musicgen-medium`` sites), KV utilization sampled
+    after every decode chunk; returns (engine, meter, kv_mean, out-by-rid)."""
+    meter = DPMeter(sites=per_token_matmul_shapes(configs.get(ARCH)))
+    engine = Engine(cfg, params, BATCH, cache_len, max_chunk=GEN,
+                    meter=meter, prefix_cache=enable)
+    sampler = _KVSampler()
+    done = drive_engine(engine, _prefix_requests(cfg), sample=sampler)
+    return engine, meter, sampler.mean, {r.rid: list(r.out) for r in done}
+
+
+def prefix_records() -> List[dict]:
+    """Prefix-sharing warm engine vs cold-cache engine on identical seeded
+    shared-system-prompt traffic, per substrate.
+
+    The acceptance invariants (gated in ``check_regression`` and pinned by
+    ``test_bench_schema``): greedy outputs bit-identical to the cold run
+    (``token_match``), a strictly positive hit rate, and a strictly positive
+    billed-prefill-energy saving (``j_per_token_saved`` - the J/token the
+    cache's skipped prefill dot-products would have cost at the committed
+    low-SNR QR design point).  The prefix counters are structural (pure
+    functions of the seeded schedule) and gate exactly."""
+    from repro.core.substrate import calibrate_model
+
+    pt = optimize(n=ENERGY_N, snr_t_target_db=ENERGY_SNR_LOW, kinds=("qr",))
+    records: List[dict] = []
+    for mode in PREFIX_MODES:
+        cfg = _mk_cfg(mode)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        if mode:
+            # freeze calibration (drift_records' rng(1) reference batch):
+            # warm-vs-cold identity needs one fixed quantization map
+            ref = np.random.default_rng(1).integers(0, cfg.vocab_size,
+                                                    (2, 24))
+            cfg = calibrate_model(cfg, params, [ref])
+        lens = [len(r.prompt) for r in _prefix_requests(cfg)]
+        cache_len = max(prefill_bucket(l, True, 10**9)
+                        for l in lens) + GEN + 8
+        cold, meter_c, kv_cold, toks_cold = _prefix_run(
+            cfg, params, cache_len, enable=False)
+        warm, meter_w, kv_warm, toks_warm = _prefix_run(
+            cfg, params, cache_len, enable=True)
+        stats = warm.prefix_stats()
+        sub = substrate_for_design(pt)
+        rep_w = serve_energy_report(
+            meter_w, substrate=sub,
+            generated_tokens=sum(len(t) for t in toks_warm.values()),
+            requests=len(toks_warm))
+        rep_c = serve_energy_report(
+            meter_c, substrate=sub,
+            generated_tokens=sum(len(t) for t in toks_cold.values()),
+            requests=len(toks_cold))
+        records.append({
+            "bench": "serve_prefix", "arch": ARCH,
+            "mode": mode or "digital", "substrate": mode or "digital",
+            "config": "prefix_engine", "slots": BATCH,
+            "requests": PREFIX_REQUESTS, "gen": GEN,
+            "prefix_len": PREFIX_LEN, "prefix_dup": PREFIX_DUP,
+            "workload_seed": PREFIX_SEED,
+            "snr_t_target_db": ENERGY_SNR_LOW, "kind": "qr",
+            "token_match": toks_warm == toks_cold,
+            "prefix_lookups": stats["lookups"],
+            "prefix_hits": stats["hits"],
+            "hit_rate": stats["hit_rate"],
+            "prefix_hit_tokens": stats["hit_tokens"],
+            "saved_billed_tokens": stats["saved_billed_tokens"],
+            "cow_copies": stats["cow_copies"],
+            "prefix_evictions": stats["evictions"],
+            "cached_blocks": stats["cached_blocks"],
+            "prefill_calls": warm.prefill_calls,
+            "prefill_rows": warm.prefill_rows,
+            "prefill_rows_cold": cold.prefill_rows,
+            "prefill_tokens": rep_w.prefill_tokens,
+            "prefill_tokens_cold": rep_c.prefill_tokens,
+            "kv_bytes_per_active_token": round(kv_warm, 1),
+            "kv_bytes_per_active_token_cold": round(kv_cold, 1),
+            "prefill_j": rep_w.prefill_j,
+            "prefill_j_cold": rep_c.prefill_j,
+            "j_per_token": rep_w.j_per_token,
+            "j_per_token_cold": rep_c.j_per_token,
+            "saved_prefill_j": rep_w.saved_prefill_j,
+            "j_per_token_saved": rep_w.j_per_token_saved,
+        })
+    return records
+
+
+# ---------------------------------------------------------------------------
 # tensor-parallel sharded serve (multi-device scaling suite)
 # ---------------------------------------------------------------------------
 
@@ -1159,6 +1276,17 @@ def rows_from_records(records: List[dict]) -> List[Row]:
                 f"@{r['overload']}x overload; pool_util_gain="
                 f"{r['pool_util_gain']} preempt={r['preempt_count']} "
                 f"deaths={r['engine_deaths']} conserved={r['conserved']}",
+            ))
+        elif r["bench"] == "serve_prefix":
+            rows.append((
+                f"serve/prefix_{tag}",
+                r["hit_rate"],
+                f"prefix hit rate ({r['prefix_hits']}/{r['prefix_lookups']} "
+                f"admissions); saved {r['saved_billed_tokens']} billed "
+                f"prefill tokens = {r['j_per_token_saved']:.3e} J/token "
+                f"({r['j_per_token_cold']:.3e}->{r['j_per_token']:.3e}) "
+                f"cow={r['cow_copies']} evict={r['prefix_evictions']} "
+                f"token_match={r['token_match']}",
             ))
         else:
             kv = r.get("kv_bytes_per_active_token")

@@ -92,6 +92,16 @@ class DPMeter:
         self.shed_requests = 0
         self.preemptions = 0
         self.substrate_swaps = 0
+        # prefix-sharing counters: a hit admission bills only its uncached
+        # suffix; ``prefix_saved_billed_tokens`` is the billed prefill work a
+        # cold admission of the same request WOULD have executed minus what
+        # the warm one did - the tokens whose dot-product energy the cache
+        # avoided outright (priced by serve_energy_report)
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_saved_billed_tokens = 0
+        self.cow_copies = 0
         # tensor-parallel provenance: the sharded engine stamps its mesh and
         # per-device KV pool capacity so energy/bench rollups can report the
         # per-device footprint next to the billed work
@@ -160,6 +170,31 @@ class DPMeter:
             "last_report": self.drift_reports[-1] if self.drift_reports
             else None,
         }
+    def note_prefix_admission(self, suffix_billed: int, cold_bucket: int,
+                              hit_tokens: int):
+        """One prefix-HIT admission: ``suffix_billed`` token-forwards of
+        suffix prefill actually ran (teacher-forced decode steps - no bucket
+        padding, one row), against the ``cold_bucket`` a cold admission
+        would have billed; ``hit_tokens`` prompt positions were served from
+        cached blocks without any dot-product work."""
+        self.prefill_billed_tokens += suffix_billed
+        self.prefill_true_tokens += suffix_billed
+        self.prefill_groups += 1
+        self.prefill_rows += 1
+        self.prefix_lookups += 1
+        self.prefix_hits += 1
+        self.prefix_hit_tokens += hit_tokens
+        self.prefix_saved_billed_tokens += max(0, cold_bucket - suffix_billed)
+
+    def note_prefix_miss(self):
+        """One cold admission under an enabled prefix cache (its blocks are
+        now indexed for future sharers)."""
+        self.prefix_lookups += 1
+
+    def note_cow_copy(self):
+        """One copy-on-write block copy (a write landed in a shared block)."""
+        self.cow_copies += 1
+
     def note_prefill(self, r_real: int, bucket: int,
                      true_lens: Optional[Sequence[int]] = None):
         """One admitted prefill group: ``r_real`` real rows (pow2 pad rows
@@ -285,10 +320,20 @@ class EnergyReport:
     # structured online-calibration rollup (DPMeter.drift_summary()); None
     # when the workload ran without a drift monitor
     drift: Optional[dict] = None
+    # billed prefill energy the prefix cache avoided (the cold-admission
+    # dot-products that never ran), priced through the same rollup as the
+    # billed work; 0.0 for prefix-free workloads
+    saved_prefill_j: float = 0.0
 
     @property
     def total_j(self) -> float:
         return self.prefill_j + self.decode_j
+
+    @property
+    def j_per_token_saved(self) -> float:
+        """Avoided prefill energy per delivered token: the prefix cache's
+        J/token discount (what j_per_token WOULD grow by without sharing)."""
+        return self.saved_prefill_j / max(self.generated_tokens, 1)
 
     @property
     def j_per_token(self) -> float:
@@ -328,10 +373,13 @@ class EnergyReport:
             "delay_per_token_s": self.delay_per_token_s,
             "tok_s_compute": self.tok_s_compute,
         }
-        # drift activity rides along only when it happened: the legacy
-        # record shape is unchanged for drift-free workloads
+        # drift activity / prefix savings ride along only when they
+        # happened: the legacy record shape is unchanged otherwise
         if self.drift is not None:
             out["drift"] = self.drift
+        if self.saved_prefill_j:
+            out["saved_prefill_j"] = self.saved_prefill_j
+            out["j_per_token_saved"] = self.j_per_token_saved
         return out
 
 
@@ -363,11 +411,15 @@ def serve_energy_report(
                                           meter.prefill_billed_tokens)
         dec = substrate_energy_for_tokens(sites, substrate,
                                           meter.decode_billed_tokens)
+        sav = substrate_energy_for_tokens(sites, substrate,
+                                          meter.prefix_saved_billed_tokens)
     elif design is None:
         raise ValueError("need a design point or a substrate to bill")
     else:
         pre = energy_for_tokens(sites, design, meter.prefill_billed_tokens)
         dec = energy_for_tokens(sites, design, meter.decode_billed_tokens)
+        sav = energy_for_tokens(sites, design,
+                                meter.prefix_saved_billed_tokens)
     if generated_tokens is None:
         # best available proxy: every billed decode token is delivered, plus
         # one first token per prefill row
@@ -385,6 +437,7 @@ def serve_energy_report(
         delay_per_token_s=dec["delay_per_token_s"],
         substrate=substrate,
         drift=meter.drift_summary(),
+        saved_prefill_j=sav["energy_j"],
     )
 
 
@@ -423,7 +476,8 @@ def request_itl_gaps(req) -> List[float]:
     return [ts[i + 1] - ts[i] for i in range(len(ts) - 1)]
 
 
-def slo_summary(requests, elapsed: float, policy: str = "") -> dict:
+def slo_summary(requests, elapsed: float, policy: str = "",
+                prefix_hits: int = 0, cow_copies: int = 0) -> dict:
     """Roll a finished SLO workload up to the scheduling scoreboard.
 
     A request MEETS its SLO iff it completed without error, its TTFT is
@@ -490,6 +544,10 @@ def slo_summary(requests, elapsed: float, policy: str = "") -> dict:
         "ttft_p99": percentile(ttfts, 99),
         "itl_p50": percentile(gaps, 50),
         "itl_p99": percentile(gaps, 99),
+        # prefix-sharing under churn: hits that survived preemption pressure
+        # and the CoW copies taken to keep shared blocks immutable
+        "prefix_hits": prefix_hits,
+        "cow_copies": cow_copies,
     }
 
 
@@ -497,7 +555,7 @@ def format_slo_summary(summary: dict) -> str:
     keys = ["requests", "completed", "shed", "errored", "ttft_miss",
             "itl_miss", "slo_met", "preemptions", "elapsed_steps",
             "goodput", "goodput_tokens", "ttft_p50", "ttft_p99", "itl_p50",
-            "itl_p99"]
+            "itl_p99", "prefix_hits", "cow_copies"]
     lines = []
     for k in keys:
         v = summary.get(k)

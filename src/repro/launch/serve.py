@@ -152,6 +152,7 @@ from repro.launch.sharding import (
 from repro.models import decode_step, init_paged_cache, init_params, prefill
 from repro.runtime import drift as drift_lib
 from repro.runtime import fault as fault_lib
+from repro.runtime.prefix_cache import PrefixCache
 
 log = logging.getLogger("repro.serve")
 
@@ -244,7 +245,7 @@ def prefill_bucket(length: int, bucketable: bool, cache_len: int) -> int:
 
 
 class BlockAllocator:
-    """Free-list allocator over the physical KV block pool.
+    """Refcounting free-list allocator over the physical KV block pool.
 
     Contract (pinned by the hypothesis property tests):
       - block 0 is reserved (the garbage block) and is never handed out;
@@ -254,6 +255,22 @@ class BlockAllocator:
       - ``free(blocks)`` returns blocks to the pool; freed blocks are
         immediately reusable;
       - ``free_count + sum(len(owned))`` is conserved at ``num_blocks - 1``.
+
+    Prefix-sharing extension (same conservation law, refined):
+      - ``alloc`` acquires each block at refcount 1; ``retain`` takes an
+        extra reference (a second request linking a shared prefix block);
+        ``free`` is a ref-RELEASE - the block only leaves ``used`` when its
+        last reference drops, so preempting/retiring one sharer never pulls
+        a block out from under its peers;
+      - ``register_cached`` marks a block as owned by the prefix index:
+        when its refcount hits zero it parks on an insertion-ordered IDLE
+        list (still occupying pool memory, still serving future prefix
+        hits) instead of returning to the free list;
+      - ``evict`` reclaims one idle cached block (the engine picks WHICH -
+        leaf-first LRU over the radix index) back onto the free list;
+      - conservation: ``free_count + referenced + idle_cached`` is invariant
+        at ``num_blocks - 1``; the free list never contains a block that is
+        referenced or cached.
     """
 
     def __init__(self, num_blocks: int):
@@ -263,6 +280,10 @@ class BlockAllocator:
         # LIFO free list: recently freed (cache-warm) blocks are reused first
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
         self._allocated: set = set()
+        self._ref: Dict[int, int] = {}
+        self._cached: set = set()
+        # refcount-zero cached blocks, insertion-ordered = release-time LRU
+        self._idle: Dict[int, None] = {}
 
     @property
     def free_count(self) -> int:
@@ -272,19 +293,70 @@ class BlockAllocator:
     def used_count(self) -> int:
         return len(self._allocated)
 
+    @property
+    def evictable_count(self) -> int:
+        return len(self._idle)
+
+    def refcount(self, b: int) -> int:
+        return self._ref.get(b, 0)
+
+    def is_evictable(self, b: int) -> bool:
+        return b in self._idle
+
     def alloc(self, n: int) -> Optional[List[int]]:
         if n > len(self._free):
             return None
         blocks = [self._free.pop() for _ in range(n)]
         self._allocated.update(blocks)
+        for b in blocks:
+            self._ref[b] = 1
         return blocks
 
-    def free(self, blocks: List[int]):
+    def retain(self, blocks: List[int]):
+        """Take one extra reference on each block (prefix-hit linking).
+        A retained idle cached block leaves the eviction candidate set."""
         for b in blocks:
             if b not in self._allocated:
+                raise ValueError(f"retain of unallocated block {b}")
+            self._ref[b] = self._ref.get(b, 0) + 1
+            self._idle.pop(b, None)
+
+    def free(self, blocks: List[int]):
+        """Release one reference per block.  At refcount zero a cached
+        block goes idle (evictable, still resident); an uncached block
+        returns to the free list."""
+        for b in blocks:
+            if b not in self._allocated or self._ref.get(b, 0) <= 0:
                 raise ValueError(f"double free / foreign block {b}")
-            self._allocated.remove(b)
-            self._free.append(b)
+            self._ref[b] -= 1
+            if self._ref[b] > 0:
+                continue
+            if b in self._cached:
+                self._idle[b] = None
+            else:
+                del self._ref[b]
+                self._allocated.remove(b)
+                self._free.append(b)
+
+    def register_cached(self, b: int):
+        """Hand a block's zero-ref lifetime to the prefix index."""
+        if b not in self._allocated:
+            raise ValueError(f"cannot cache unallocated block {b}")
+        self._cached.add(b)
+        if self._ref.get(b, 0) == 0:
+            self._idle[b] = None
+
+    def evict(self, b: int):
+        """Reclaim one idle cached block onto the free list (the caller
+        must have dropped it from the prefix index first)."""
+        if b not in self._idle:
+            raise ValueError(
+                f"block {b} is not evictable (referenced or uncached)")
+        del self._idle[b]
+        self._cached.remove(b)
+        self._ref.pop(b, None)
+        self._allocated.remove(b)
+        self._free.append(b)
 
 
 def _cfg_with_calibration(cfg, calib):
@@ -317,7 +389,8 @@ class Engine:
                  drift_monitor: Optional[drift_lib.DriftMonitor] = None,
                  failure_injector: Optional[Callable[[str, Any], None]] = None,
                  alloc_policy: str = "lazy", clock=None,
-                 drift_pause_depth: Optional[int] = None, mesh=None):
+                 drift_pause_depth: Optional[int] = None, mesh=None,
+                 prefix_cache: bool = False):
         # tensor-parallel serving: a (data=1, model=N) mesh shards the
         # weights (path-based param specs) and the paged KV pools (heads
         # over ``model``); None = the classic single-device engine
@@ -383,6 +456,26 @@ class Engine:
         if alloc_policy not in ("lazy", "reserve"):
             raise ValueError(f"unknown alloc_policy {alloc_policy!r}")
         self.alloc_policy = alloc_policy
+        # prefix-sharing radix cache (host-side index; refcounts live in the
+        # allocator).  Only sound when EVERY per-request KV byte lives in the
+        # paged pool: a sliding-window ring or recurrent/MoE state cannot be
+        # reconstructed by linking blocks, so those configs serve cold.
+        self.prefix: Optional[PrefixCache] = None
+        if prefix_cache:
+            eligible = (self.has_paged and cfg.n_experts == 0
+                        and all(k == "attn" for k in kinds))
+            if eligible:
+                self.prefix = PrefixCache(block_size)
+            else:
+                log.info("prefix cache disabled: pattern %s carries "
+                         "non-paged per-request state", kinds)
+        # prefix-sharing counters (miss = a cold admission with the cache on)
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_saved_tokens = 0
+        self.cow_copies = 0
+        self.prefix_evictions = 0
         # optional runtime.workload.VirtualClock: when present, admission /
         # decode advance it and stamp t_submit/t_first/token_times in virtual
         # decode-step units (deterministic SLO metrics); None = wall clock
@@ -450,6 +543,7 @@ class Engine:
         # no recompile storms on either axis
         self._prefill_fns: Dict[Tuple[int, int, bool, Any], Any] = {}
         self._decode_fns: Dict[Tuple[int, bool, Any], Any] = {}
+        self._warm_fns: Dict[Tuple[int, Any], Any] = {}
         if self.tp > 1:
             rep = self._rep_sharding
             self._insert_fn = self._with_rules(jax.jit(
@@ -457,10 +551,19 @@ class Engine:
                 out_shardings=(self._cache_shardings, rep, rep)))
             self._extend_fn = self._with_rules(jax.jit(
                 self._extend_impl, out_shardings=self._cache_shardings))
+            self._cow_fn = self._with_rules(jax.jit(
+                self._cow_impl, out_shardings=self._cache_shardings))
         else:
             self._insert_fn = jax.jit(self._insert_impl)
             self._extend_fn = jax.jit(self._extend_impl)
+            self._cow_fn = jax.jit(self._cow_impl)
         self._block_bytes, self._fixed_kv_bytes = self._kv_accounting()
+        if self.prefix is not None and self._fixed_kv_bytes > 0:
+            # belt-and-braces: a contiguous ring/recurrent leaf means part of
+            # the per-request state is NOT addressable through block tables
+            log.info("prefix cache disabled: %d bytes of contiguous "
+                     "per-request KV state", self._fixed_kv_bytes)
+            self.prefix = None
         # per-device KV footprint: head-sharded pool/ring leaves split their
         # bytes over the model axis; the block tables and everything else
         # replicate (the allocator is whole per shard group)
@@ -701,6 +804,20 @@ class Engine:
             if err is not None:
                 self.fail_request(pending.pop(0), err)
                 continue
+            if self.prefix is not None:
+                # prefix-hit heads admit SOLO through the warm path (linked
+                # shared blocks + suffix-only prefill); strict FIFO order is
+                # preserved because only the head is considered
+                state = self._try_admit_prefix(pending[0], free_slots[0])
+                if state == "admitted":
+                    admitted.append(pending.pop(0))
+                    continue
+                if state == "defer":
+                    break  # head waits for blocks/evictions to free up
+                if state == "failed":
+                    pending.pop(0)  # already retired via fail_request
+                    continue
+                # "miss": fall through to the cold batched path
             bucket = self._bucket(pending[0])
             group: List[Request] = []
             reserved = 0
@@ -714,7 +831,10 @@ class Engine:
                     # it reaches the head (nothing admitted behind it leaks)
                     break
                 need = self._blocks_needed(r)
-                if reserved + need > self.alloc.free_count:
+                # idle cached prefix blocks count as capacity: _alloc_blocks
+                # evicts them (LRU leaf-first) when the free list runs short
+                if reserved + need > (self.alloc.free_count
+                                      + self.alloc.evictable_count):
                     break
                 group.append(r)
                 reserved += need
@@ -754,7 +874,7 @@ class Engine:
             toks[r, :length] = pvec
             true_len[r] = length
             slot_vec[r] = slot_ids[r]
-            blocks = self.alloc.alloc(self._blocks_needed(req))
+            blocks = self._alloc_blocks(self._blocks_needed(req))
             assert blocks is not None  # reserved in admit_pending
             self._slot_blocks[slot_ids[r]] = blocks
             bt_rows[r, : len(blocks)] = blocks
@@ -827,6 +947,13 @@ class Engine:
             self._slot_pos[sid] = int(true_len[r])
             self._slot_seq[sid] = self._admit_seq
             self._admit_seq += 1
+            if self.prefix is not None:
+                # a cold admission under an enabled cache is a prefix MISS;
+                # its full prompt blocks are indexed for future sharers
+                self.prefix_lookups += 1
+                if self.meter is not None:
+                    self.meter.note_prefix_miss()
+                self._register_prefix(req, sid)
             req.out.append(int(tok0_host[r]))
             if req.t_first is None:  # a resumed request keeps its real TTFT
                 req.t_first = t_first
@@ -1001,7 +1128,7 @@ class Engine:
             deficit = need - len(self._slot_blocks[i])
             if deficit <= 0:
                 continue
-            got = self.alloc.alloc(deficit)
+            got = self._alloc_blocks(deficit)
             while got is None:
                 victim = self._pick_victim(i)
                 if victim is None:
@@ -1010,7 +1137,7 @@ class Engine:
                     self._preempt(i)
                     break
                 self._preempt(victim)
-                got = self.alloc.alloc(deficit)
+                got = self._alloc_blocks(deficit)
             if got is None:
                 continue
             have = len(self._slot_blocks[i])
@@ -1055,6 +1182,267 @@ class Engine:
             return sub
 
         return {k: walk(v, k == "blocks") for k, v in cache.items()}
+
+    # -- prefix sharing --------------------------------------------------------
+    def _alloc_blocks(self, n: int) -> Optional[List[int]]:
+        """``alloc`` with eviction pressure: when the free list runs short,
+        reclaim idle cached prefix blocks (LRU, leaf-first over the radix
+        index) until the allocation fits or nothing is evictable."""
+        if n == 0:
+            return []
+        blocks = self.alloc.alloc(n)
+        while blocks is None and self._evict_one():
+            blocks = self.alloc.alloc(n)
+        return blocks
+
+    def _evict_one(self) -> bool:
+        """Evict ONE idle cached block: drop the least-recently-used leaf of
+        the radix index whose block holds no references.  Leaf-first keeps
+        every remaining chain reachable; referenced leaves (a sharer is
+        mid-flight) are skipped."""
+        if self.prefix is None:
+            return False
+        for node in self.prefix.leaves_lru():
+            if self.alloc.is_evictable(node.block):
+                self.prefix.remove(node)
+                self.alloc.evict(node.block)
+                self.prefix_evictions += 1
+                return True
+        return False
+
+    def _register_prefix(self, req: Request, sid: int):
+        """Index the admitted request's full prompt blocks so later sharers
+        can link them.  Only FULL blocks enter the index (they are immutable:
+        every later write for this slot lands at position >= the prompt
+        length); newly indexed blocks hand their zero-ref lifetime to the
+        allocator's cached set."""
+        n_full = len(req.full_prompt) // self.block
+        chain = self._slot_blocks[sid][:n_full]
+        if n_full == 0 or len(chain) < n_full:
+            return
+        for b in self.prefix.insert(req.full_prompt, chain):
+            self.alloc.register_cached(b)
+
+    def _try_admit_prefix(self, req: Request, slot: int) -> str:
+        """Warm admission of a prefix-hit head request into ``slot``.
+
+        Matches the longest chain of cached full blocks prefixing the
+        request's (resume) prompt, retains + links those physical blocks
+        into the slot's block table, and runs prefill ONLY over the uncached
+        suffix as a teacher-forced decode scan (the same decode==prefill
+        argmax equivalence the recompute-preemption contract pins, in
+        reverse).  At least one token is always re-fed so the final
+        position's logits exist; when the whole prompt is cached that
+        re-feed writes INSIDE the last shared block, which triggers
+        copy-on-write: a one-block jitted pool copy into a fresh private
+        block that replaces the shared one in this slot's table only.
+
+        Returns "miss" (no cached prefix - caller takes the cold path),
+        "defer" (hit, but blocks are short - head waits), "failed"
+        (persistent device error - request retired), or "admitted".
+        """
+        pvec = req.full_prompt
+        nodes = self.prefix.match(pvec)
+        if not nodes:
+            return "miss"
+        length = len(pvec)
+        bs = self.block
+        m = len(nodes)
+        start = min(bs * m, length - 1)  # always re-feed >= 1 token
+        t_true = length - start
+        cow = (start // bs) < m  # re-feed write lands in a shared block
+        keep = nodes[:-1] if cow else nodes
+        total = (self._blocks_total(req) if self.alloc_policy == "reserve"
+                 else -(-length // bs))
+        fresh_n = total - len(keep)
+        shared = [n.block for n in keep]
+        matched = [n.block for n in nodes]
+        # retain EVERY matched block (incl. a CoW source) BEFORE allocating:
+        # eviction pressure inside _alloc_blocks must never reclaim a block
+        # this admission is about to link or copy from
+        self.alloc.retain(matched)
+        fresh = self._alloc_blocks(fresh_n)
+        if fresh is None:
+            self.alloc.free(matched)
+            return "defer"
+        blocks = list(shared)
+        if cow:
+            blocks.append(fresh[0])
+        blocks.extend(fresh[1:] if cow else fresh)
+        if req.t_submit is None:
+            req.t_submit = self._now()
+        if cow:
+            # private copy of the shared block's earlier positions; the
+            # suffix scan then overwrites only position ``length - 1``.  The
+            # source's extra reference drops once the copy is taken (it
+            # stays indexed for other sharers).
+            self.cache = self._cow_fn(self.cache,
+                                      jnp.int32(nodes[-1].block),
+                                      jnp.int32(fresh[0]))
+            self.alloc.free([nodes[-1].block])
+            self.cow_copies += 1
+            if self.meter is not None:
+                self.meter.note_cow_copy()
+        bt_row = np.zeros((self.max_blocks,), np.int32)
+        bt_row[: len(blocks)] = blocks
+        t_pad = 1
+        while t_pad < t_true:
+            t_pad *= 2
+        toks = np.zeros((self.batch_slots, t_pad), np.int32)
+        toks[slot, :t_true] = pvec[start:]
+        fn_key = (t_pad, self.substrate.trace_key)
+        fn = self._warm_fns.get(fn_key)
+        if fn is None:
+            fn = self._warm_fns[fn_key] = self._make_warm(t_pad)
+
+        def run_warm():
+            if self.failure_injector is not None:
+                self.failure_injector("prefill", (req.rid,))
+            return fn(self.params, self.cache, jnp.asarray(bt_row),
+                      jnp.int32(slot), jnp.asarray(toks),
+                      jnp.int32(t_true), jnp.int32(start),
+                      self.last_token, self.pos, self._next_key(),
+                      self._calib)
+
+        try:
+            cache, last_token, pos, tok0 = fault_lib.call_with_retries(
+                run_warm, 1, retryable=fault_lib.is_transient_device_error,
+                describe=f"warm prefill rid={req.rid}", logger=log)
+        except Exception as e:
+            if not fault_lib.is_transient_device_error(e):
+                raise
+            # the pure warm fn never committed: device block tables are
+            # untouched, so releasing the references fully unwinds
+            self.alloc.free(blocks)
+            self.fail_request(
+                req, f"warm prefill failed after retry: {e!r}",
+                kind="prefill")
+            return "failed"
+        self.cache, self.last_token, self.pos = cache, last_token, pos
+        self._slot_blocks[slot] = blocks
+        self.slots[slot] = req
+        self._slot_pos[slot] = length
+        self._slot_seq[slot] = self._admit_seq
+        self._admit_seq += 1
+        self.prefill_calls += 1
+        self.prefill_rows += 1
+        self.prefix_lookups += 1
+        self.prefix_hits += 1
+        self.prefix_hit_tokens += start
+        cold_bucket = self._bucket(req)
+        self.prefix_saved_tokens += max(0, cold_bucket - t_true)
+        if self.meter is not None:
+            self.meter.note_prefix_admission(t_true, cold_bucket, start)
+        if self.clock is not None:
+            self.clock.advance(t_true * self.clock.prefill_token_cost)
+        # register BEFORE appending tok0: tok0's K/V is not in the cache yet
+        # (it is written when fed back on the first decode step)
+        self._register_prefix(req, slot)
+        t_first = self._now()
+        req.out.append(int(tok0))
+        if req.t_first is None:
+            req.t_first = t_first
+        if self.clock is not None:
+            req.token_times.append(t_first)
+        if len(req.out) >= req.effective_max:
+            self._retire(slot)
+        log.info("prefix hit request %d: %d/%d tokens cached (%d blocks, "
+                 "suffix %d%s)", req.rid, start, length, m, t_true,
+                 ", CoW" if cow else "")
+        return "admitted"
+
+    def _make_warm(self, t_pad: int):
+        """Suffix prefill as a teacher-forced fused decode scan: link the
+        slot's block-table row, start from ``start_pos``, feed the suffix
+        tokens one step at a time (inactive rows and pad steps write to the
+        garbage block), and return the final true step's argmax - exactly
+        the ``tok0`` a cold bucketed prefill of the full prompt produces."""
+        cfg = self.cfg
+
+        def warm(params, cache, bt_row, slot, toks, t_true, start_pos,
+                 last_tok, pos, key, calib):
+            run_cfg = _cfg_with_calibration(cfg, calib)
+
+            def link(sub, stacked):
+                if isinstance(sub, dict) and "pk" in sub:
+                    out = dict(sub)
+                    bt = sub["bt"]
+                    if stacked:
+                        src = jnp.broadcast_to(
+                            bt_row, (bt.shape[0],) + bt_row.shape)
+                        out["bt"] = bt.at[:, slot].set(src)
+                    else:
+                        out["bt"] = bt.at[slot].set(bt_row)
+                    return out
+                if isinstance(sub, dict):
+                    return {k: link(v, stacked) for k, v in sub.items()}
+                return sub
+
+            cache = {k: link(v, k == "blocks") for k, v in cache.items()}
+            pos = pos.at[slot].set(start_pos)
+            row = jnp.arange(pos.shape[0]) == slot
+
+            def step(carry, t):
+                cache, pos, out = carry
+                fed = toks[:, t]
+                act = row & (t < t_true)
+                k = None if key is None else jax.random.fold_in(key, t)
+                logits, new_cache = decode_step(
+                    params, run_cfg, fed, dict(cache, pos=pos), rng=k,
+                    active=act,
+                )
+                nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                out = jnp.where(t < t_true, nxt[slot], out)
+                new_pos = jnp.where(act, pos + 1, pos)
+                new_cache.pop("pos")
+                return (new_cache, new_pos, out), None
+
+            (cache, pos, out), _ = jax.lax.scan(
+                step, (cache, pos, last_tok[slot]), jnp.arange(t_pad))
+            return cache, last_tok.at[slot].set(out), pos, out
+
+        if self.tp > 1:
+            rep = self._rep_sharding
+            return self._with_rules(jax.jit(
+                warm, out_shardings=(self._cache_shardings, rep, rep, rep)))
+        return jax.jit(warm)
+
+    def _cow_impl(self, cache, src, dst):
+        """Copy one physical block's K/V across every paged layer group -
+        the device half of copy-on-write.  One jitted call per CoW event;
+        the block-table rewrite rides the warm scan's link step."""
+
+        def walk(sub, stacked):
+            if isinstance(sub, dict) and "pk" in sub:
+                out = dict(sub)
+                for pool_key in ("pk", "pv"):
+                    pool = sub[pool_key]
+                    if stacked:
+                        out[pool_key] = pool.at[:, dst].set(pool[:, src])
+                    else:
+                        out[pool_key] = pool.at[dst].set(pool[src])
+                return out
+            if isinstance(sub, dict):
+                return {k: walk(v, stacked) for k, v in sub.items()}
+            return sub
+
+        return {k: walk(v, k == "blocks") for k, v in cache.items()}
+
+    def prefix_stats(self) -> Dict[str, Any]:
+        """Host-side prefix-sharing scoreboard (bench/CLI surface)."""
+        lookups = self.prefix_lookups
+        return {
+            "enabled": self.prefix is not None,
+            "lookups": lookups,
+            "hits": self.prefix_hits,
+            "hit_rate": round(self.prefix_hits / lookups, 4) if lookups
+            else 0.0,
+            "hit_tokens": self.prefix_hit_tokens,
+            "saved_billed_tokens": self.prefix_saved_tokens,
+            "cow_copies": self.cow_copies,
+            "evictions": self.prefix_evictions,
+            "cached_blocks": len(self.prefix) if self.prefix else 0,
+        }
 
     # -- online calibration ----------------------------------------------------
     def swap_calibration(self, calibration: substrate_lib.Calibration):
@@ -1457,6 +1845,24 @@ def main(argv=None):
     ap.add_argument("--drift-pause-depth", type=int, default=None,
                     help="pause drift shadow sampling while the queue is "
                          "deeper than this (saturation guard)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="prefix-sharing paged KV: a radix index over token "
+                         "prefixes at block granularity links already-cached "
+                         "blocks into new requests' block tables (refcounted "
+                         "copy-on-write); admission prefills only the "
+                         "uncached suffix.  Greedy tokens are identical to "
+                         "a cold-cache run under frozen calibration")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="shared-system-prompt traffic: every request's "
+                         "prompt starts with this many common tokens "
+                         "(drawn once per run) followed by its unique "
+                         "--prompt-len(s) tail; with --workload the shared "
+                         "prefixes come from per-class seeded pools instead")
+    ap.add_argument("--prefix-dup", type=int, default=4,
+                    help="with --workload and --shared-prefix-len: requests "
+                         "per distinct shared prefix within each request "
+                         "class (the duplication factor)")
     ap.add_argument("--decode-attn", default="kernel",
                     choices=["kernel", "gather"],
                     help="paged decode attention: 'kernel' streams KV blocks "
@@ -1520,7 +1926,8 @@ def main(argv=None):
                  "batch-invariance", ref.shape,
                  len(cfg.imc.calibration.site_names()))
     bucketable = not needs_exact_prefill(cfg)
-    max_bucket = max(prefill_bucket(l, bucketable, 10**9) for l in lens)
+    max_bucket = max(prefill_bucket(l + args.shared_prefix_len, bucketable,
+                                    10**9) for l in lens)
     cache_len = max_bucket + args.gen + 8
     meter = None
     if args.energy_report:
@@ -1557,7 +1964,7 @@ def main(argv=None):
                     kv_blocks=args.kv_blocks, meter=meter,
                     drift_monitor=monitor, alloc_policy=args.alloc,
                     clock=clock, drift_pause_depth=args.drift_pause_depth,
-                    mesh=mesh)
+                    mesh=mesh, prefix_cache=args.prefix_cache)
 
     if args.workload != "none":
         from repro.launch.metering import format_slo_summary, slo_summary
@@ -1567,7 +1974,8 @@ def main(argv=None):
         wcfg = workload_lib.make_overload_config(
             n_requests=args.requests, seed=args.workload_seed,
             overload=args.overload, slots=args.batch, max_new=args.gen,
-            arrival=args.workload)
+            arrival=args.workload, prefix_len=args.shared_prefix_len,
+            prefix_dup=args.prefix_dup)
         requests = workload_lib.generate(wcfg, cfg.vocab_size)
         policy = make_policy(args.slo_policy)
         controller = None
@@ -1577,7 +1985,9 @@ def main(argv=None):
         finished = serve_slo(engine, requests, policy=policy,
                              controller=controller)
         summary = slo_summary(finished, elapsed=engine.clock.now,
-                              policy=policy.name)
+                              policy=policy.name,
+                              prefix_hits=engine.prefix_hits,
+                              cow_copies=engine.cow_copies)
         summary.update(
             preemptions=engine.preempt_count,
             shed=engine.shed_requests,
@@ -1592,12 +2002,14 @@ def main(argv=None):
         return finished
 
     rnp = np.random.default_rng(0)
-    requests = [
-        Request(rid=i,
-                prompt=rnp.integers(0, cfg.vocab_size, lens[i % len(lens)]),
-                max_new=args.gen)
-        for i in range(args.requests)
-    ]
+    shared_prefix = (rnp.integers(0, cfg.vocab_size, args.shared_prefix_len)
+                     if args.shared_prefix_len else None)
+    requests = []
+    for i in range(args.requests):
+        tail = rnp.integers(0, cfg.vocab_size, lens[i % len(lens)])
+        prompt = (np.concatenate([shared_prefix, tail])
+                  if shared_prefix is not None else tail)
+        requests.append(Request(rid=i, prompt=prompt, max_new=args.gen))
     t0 = time.perf_counter()
     if args.inject_drift:
         scale_s, _, after_s = args.inject_drift.partition("@")
@@ -1638,6 +2050,15 @@ def main(argv=None):
     if failed:
         log.warning("%d request(s) finished with an error status: %s",
                     len(failed), [r.rid for r in failed])
+    if args.prefix_cache:
+        ps = engine.prefix_stats()
+        print(f"prefix cache: hit_rate={ps['hit_rate']:.2f} "
+              f"({ps['hits']}/{ps['lookups']} admissions), "
+              f"prefill tokens skipped={ps['hit_tokens']}, "
+              f"billed prefill tokens saved={ps['saved_billed_tokens']}, "
+              f"cow_copies={ps['cow_copies']}, "
+              f"evictions={ps['evictions']}, "
+              f"cached_blocks={ps['cached_blocks']}")
     if monitor is not None:
         c = monitor.counters()
         print(f"online calibration: {c['shadow_samples']} shadow samples / "
@@ -1674,6 +2095,17 @@ def main(argv=None):
               f"{meter.prefill_pad_tokens}, decode tokens="
               f"{meter.decode_billed_tokens}):")
         print(format_report(reports))
+        if meter.prefix_saved_billed_tokens:
+            print(f"prefix-cache energy savings ("
+                  f"{meter.prefix_saved_billed_tokens} billed prefill "
+                  f"tokens avoided):")
+            for r in reports:
+                frac = r.saved_prefill_j / max(
+                    r.total_j + r.saved_prefill_j, 1e-30)
+                print(f"  {r.design.arch_kind:>4s} @ "
+                      f"{r.design.snr_t_db:5.1f} dB: "
+                      f"-{r.j_per_token_saved:.3e} J/token "
+                      f"({100 * frac:.1f}% of the cold bill)")
     return finished
 
 

@@ -97,12 +97,23 @@ class WorkloadConfig:
     gen_median: float = 6.0
     gen_sigma: float = 0.5
     classes: Tuple[RequestClass, ...] = DEFAULT_CLASSES
+    # shared-system-prompt traffic: every request's prompt starts with a
+    # ``prefix_len``-token prefix drawn from its CLASS's pool of distinct
+    # prefixes (pool size ~ class share of n_requests / prefix_dup, so
+    # ``prefix_dup`` requests share each system prompt on average - the
+    # high-duplication regime prefix-sharing KV caches exist for).  0
+    # disables (every prompt fully unique, the legacy draw, stream-identical
+    # to pre-prefix workloads).
+    prefix_len: int = 0
+    prefix_dup: int = 4
 
     def __post_init__(self):
         if self.arrival not in ("poisson", "bursty"):
             raise ValueError(f"unknown arrival process {self.arrival!r}")
         if not self.classes:
             raise ValueError("need at least one request class")
+        if self.prefix_len < 0 or self.prefix_dup < 1:
+            raise ValueError("prefix_len must be >= 0 and prefix_dup >= 1")
 
 
 def make_overload_config(n_requests: int = 32, seed: int = 0,
@@ -122,7 +133,9 @@ def make_overload_config(n_requests: int = 32, seed: int = 0,
     mean_prompt = probe.prompt_median * math.exp(probe.prompt_sigma ** 2 / 2)
     mean_gen = min(probe.gen_median * math.exp(probe.gen_sigma ** 2 / 2),
                    float(max_new))
-    cost = mean_prompt * prefill_token_cost + mean_gen
+    # shared prefixes are costed COLD here: the capacity model prices what a
+    # cache-less engine must serve, so a prefix cache shows up as headroom
+    cost = (mean_prompt + probe.prefix_len) * prefill_token_cost + mean_gen
     return WorkloadConfig(
         n_requests=n_requests, seed=seed, arrival=arrival, max_new=max_new,
         mean_interarrival=cost / (max(slots, 1) * overload), **kw)
@@ -167,6 +180,17 @@ def generate(wcfg: WorkloadConfig, vocab_size: int) -> List["Request"]:
     times = _arrival_times(rng, wcfg)
     weights = np.array([c.weight for c in wcfg.classes], float)
     weights = weights / weights.sum()
+    # per-class shared-system-prompt pools: each class holds roughly
+    # (its share of n_requests) / prefix_dup distinct prefixes, all drawn
+    # from the SAME seeded stream (prefix_len == 0 adds no draws, so legacy
+    # workloads replay identically).  Pool draws happen up front, in class
+    # order, so the stream layout is independent of per-request choices.
+    pools: dict = {}
+    if wcfg.prefix_len > 0:
+        for c, w in zip(wcfg.classes, weights):
+            n_pool = max(1, round(w * wcfg.n_requests / wcfg.prefix_dup))
+            pools[c.name] = [rng.integers(0, vocab_size, wcfg.prefix_len)
+                             for _ in range(n_pool)]
     reqs: List[Request] = []
     for rid, t in enumerate(times):
         cls = wcfg.classes[int(rng.choice(len(wcfg.classes), p=weights))]
@@ -174,9 +198,14 @@ def generate(wcfg: WorkloadConfig, vocab_size: int) -> List["Request"]:
                               wcfg.prompt_min, wcfg.prompt_max)
         stop = _lognormal_int(rng, wcfg.gen_median, wcfg.gen_sigma,
                               1, wcfg.max_new)
+        prompt = rng.integers(0, vocab_size, plen)
+        if wcfg.prefix_len > 0:
+            pool = pools[cls.name]
+            prefix = pool[int(rng.integers(0, len(pool)))]
+            prompt = np.concatenate([prefix, prompt])
         reqs.append(Request(
             rid=rid,
-            prompt=rng.integers(0, vocab_size, plen),
+            prompt=prompt,
             max_new=wcfg.max_new,
             stop_at=stop,
             arrive_at=float(t),

@@ -8,6 +8,7 @@ import pytest
 
 from benchmarks.check_regression import (
     DRIFT_REQUIRED_FIELDS,
+    PREFIX_REQUIRED_FIELDS,
     SHARDED_REQUIRED_FIELDS,
     SLO_REQUIRED_FIELDS,
     SLO_SUMMARY_REQUIRED_FIELDS,
@@ -35,8 +36,8 @@ def test_committed_bench_files_exist():
                          ids=[os.path.basename(p) for p in BENCH_FILES])
 def test_bench_schema(path):
     payload = _load(path)
-    assert payload["schema_version"] == 2.5
-    assert payload["schema"] == "repro-imc-bench/v2.5"
+    assert payload["schema_version"] == 2.6
+    assert payload["schema"] == "repro-imc-bench/v2.6"
     meta = payload["meta"]
     for key in REQUIRED_META:
         assert meta.get(key), f"meta.{key} missing/empty"
@@ -80,6 +81,15 @@ def test_bench_schema(path):
                     assert field in rec, \
                         f"{suite}: serve_sharded record missing {field!r} " \
                         f"(schema v2.5)"
+            # schema v2.6: prefix-sharing serve records pin the workload
+            # identity, hit/CoW/eviction counters, warm-vs-cold token match
+            # and the billed-prefill-energy saving (also enforced by
+            # check_regression.py)
+            if rec.get("bench") == "serve_prefix":
+                for field in PREFIX_REQUIRED_FIELDS:
+                    assert field in rec, \
+                        f"{suite}: serve_prefix record missing {field!r} " \
+                        f"(schema v2.6)"
 
 
 def test_paged_attention_records_committed():
@@ -172,6 +182,37 @@ def test_serve_sharded_records_committed():
         # bytes split exactly over the shard groups
         assert r["kv_bytes_per_device"] * r["kv_shard_ways"] == \
             r["kv_bytes_total"]
+
+
+def test_serve_prefix_records_committed():
+    """The prefix-sharing paged KV comparison is part of the committed serve
+    baseline: on the seeded shared-system-prompt workload the warm engine
+    hits the radix cache (>0 hit rate), produces greedy tokens bit-identical
+    to the cold-cache engine, and the energy rollup bills a strictly
+    positive prefill-dot-product saving (J/token) at the committed QR design
+    point."""
+    payload = _load(os.path.join(ROOT, "BENCH_serve.json"))
+    recs = [r for r in payload["suites"]["serve_prefix"]["records"]
+            if r["bench"] == "serve_prefix"]
+    assert len(recs) >= 2, "BENCH_serve.json is missing serve_prefix runs"
+    substrates = {r["substrate"] for r in recs}
+    assert "digital" in substrates
+    assert any(s.startswith("imc") for s in substrates)
+    for r in recs:
+        assert r["token_match"] is True
+        assert r["prefix_hits"] >= 1
+        assert 0.0 < r["hit_rate"] <= 1.0
+        assert r["prefix_hit_tokens"] >= r["prefix_hits"]
+        assert r["saved_billed_tokens"] > 0
+        # the acceptance invariant: the cache measurably reduces the billed
+        # prefill dot-product energy vs the cold run at the same design point
+        assert r["saved_prefill_j"] > 0
+        assert r["j_per_token_saved"] > 0
+        assert r["j_per_token"] < r["j_per_token_cold"]
+        assert r["prefill_tokens"] < r["prefill_tokens_cold"]
+        # warm billed + avoided == the cold bill (token bookkeeping closes)
+        assert r["prefill_tokens"] + r["saved_billed_tokens"] == \
+            r["prefill_tokens_cold"]
 
 
 def _energy_records():

@@ -1,0 +1,288 @@
+"""Prefix-sharing paged KV correctness.
+
+The subsystem's acceptance anchor: an engine serving shared-prefix traffic
+through the radix prefix cache (linked blocks + suffix-only warm prefill,
+copy-on-write on fully-cached prompts, LRU eviction under pool pressure)
+must emit greedy tokens BIT-IDENTICAL to a cold-cache engine under frozen
+calibration on digital / imc_analytic / imc_bitserial - including across
+recompute-preemption and resume of a prefix-sharing slot.
+
+Plus the radix index unit contract (match / insert / remove / leaves_lru,
+first-writer-wins) and the allocator's refcount error paths.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import ArchConfig
+from repro.core.imc_linear import IMCConfig
+from repro.core.substrate import as_substrate, calibrate_model
+from repro.launch.serve import BlockAllocator, Engine, Request, serve
+from repro.models import init_params
+from repro.runtime.prefix_cache import PrefixCache
+
+TINY = dict(
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+    max_seq=128, flash_q_block=16, flash_kv_block=16, dtype="float32",
+)
+DENSE = ArchConfig(name="t", family="dense", **TINY)
+WINDOWED = ArchConfig(name="t", family="dense", **TINY,
+                      pattern=("local", "attn"), window=16)
+
+SUBSTRATES = ["digital", "imc_analytic", "imc_bitserial"]
+
+_PARAMS = {}
+
+
+def jax_params(cfg):
+    key = id(cfg)
+    if key not in _PARAMS:
+        _PARAMS[key] = init_params(jax.random.PRNGKey(0), cfg)
+    return _PARAMS[key]
+
+
+def _frozen_smoke(substrate):
+    """Frozen-calibration smoke config: batch-invariant IMC forwards, the
+    precondition for warm==cold bit-identity (same contract the recompute-
+    preemption suite pins)."""
+    base = configs.get_smoke("musicgen-medium")
+    if substrate == "digital":
+        return base
+    cfg_dyn = base.replace(
+        imc=IMCConfig(mode=substrate, bx=7, bw=7, v_wl=0.7))
+    params = jax_params(cfg_dyn)
+    ref_batch = np.random.default_rng(1).integers(0, base.vocab_size, (2, 24))
+    cfg = calibrate_model(cfg_dyn, params, [ref_batch])
+    _PARAMS[id(cfg)] = params
+    assert as_substrate(cfg.imc).policy == "frozen"
+    return cfg
+
+
+def _shared_requests(cfg, prefix_len, tail_lens, max_new, seed=3):
+    rnp = np.random.default_rng(seed)
+    prefix = rnp.integers(0, cfg.vocab_size, prefix_len)
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [prefix, rnp.integers(0, cfg.vocab_size, l)]),
+                    max_new=max_new)
+            for i, l in enumerate(tail_lens)]
+
+
+# ---------------------------------------------------------------------------
+# radix index unit contract
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_match_insert_roundtrip():
+    pc = PrefixCache(block_size=4)
+    toks = list(range(11))  # 2 full chunks + a 3-token partial tail
+    assert pc.match(toks) == []
+    new = pc.insert(toks, [5, 7, 9])  # extra blocks beyond chunks ignored
+    assert new == [5, 7] and len(pc) == 2  # partial tail never indexed
+    chain = pc.match(toks)
+    assert [n.block for n in chain] == [5, 7]
+    # a shorter shared prefix matches the shorter chain
+    assert [n.block for n in pc.match(list(range(6)))] == [5]
+    # divergence after the first chunk
+    assert [n.block for n in pc.match([0, 1, 2, 3, 99, 98, 97, 96])] == [5]
+    assert pc.match([99, 98, 97, 96]) == []
+    with pytest.raises(ValueError, match="needs 2 blocks"):
+        pc.insert(list(range(8)), [1])
+
+
+def test_prefix_cache_first_writer_wins():
+    pc = PrefixCache(block_size=4)
+    pc.insert(list(range(8)), [3, 4])
+    # a concurrent duplicate admission re-inserts the same chain backed by
+    # DIFFERENT physical blocks: existing nodes win, nothing new to cache
+    assert pc.insert(list(range(8)), [8, 9]) == []
+    assert [n.block for n in pc.match(list(range(8)))] == [3, 4]
+    # extending the chain caches only the new suffix node
+    assert pc.insert(list(range(12)), [8, 9, 11]) == [11]
+
+
+def test_prefix_cache_remove_and_lru_order():
+    pc = PrefixCache(block_size=4)
+    pc.insert(list(range(8)), [1, 2])        # chain A (leaf block 2)
+    pc.insert([9, 9, 9, 9], [3])             # chain B (leaf block 3)
+    # interior nodes are never eviction candidates
+    interior = pc.match(list(range(8)))[0]
+    with pytest.raises(ValueError, match="leaf"):
+        pc.remove(interior)
+    # stamping A's recency (a later insert touches the whole chain) makes
+    # B the LRU leaf
+    pc.insert(list(range(8)), [1, 2])
+    leaves = pc.leaves_lru()
+    assert [n.block for n in leaves] == [3, 2]
+    pc.remove(leaves[0])
+    assert pc.match([9, 9, 9, 9]) == [] and len(pc) == 2
+    # removing A's leaf exposes its parent as the next leaf
+    pc.remove(pc.leaves_lru()[0])
+    assert [n.block for n in pc.leaves_lru()] == [1]
+
+
+# ---------------------------------------------------------------------------
+# allocator refcount / cache error paths (directed; property sweep lives in
+# test_properties.py)
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_refcount_sharing_and_eviction():
+    a = BlockAllocator(6)
+    got = a.alloc(2)
+    a.retain(got)  # a second sharer links the same blocks
+    a.free(got)    # first sharer retires: still referenced, still held
+    assert a.used_count == 2 and a.free_count == 3
+    a.register_cached(got[0])
+    assert a.evictable_count == 0  # referenced blocks are not evictable
+    with pytest.raises(ValueError, match="not evictable"):
+        a.evict(got[0])
+    a.free(got)    # last reference drops
+    # the cached block parks idle; the uncached one returns to the pool
+    assert a.free_count == 4 and a.evictable_count == 1
+    assert a.is_evictable(got[0]) and a.used_count == 1
+    with pytest.raises(ValueError, match="double free"):
+        a.free([got[0]])  # zero-ref cached block: no reference left to drop
+    a.evict(got[0])
+    assert a.free_count == 5 and a.used_count == 0
+    with pytest.raises(ValueError, match="retain of unallocated"):
+        a.retain([got[0]])
+    with pytest.raises(ValueError, match="cannot cache unallocated"):
+        a.register_cached(3)
+
+
+# ---------------------------------------------------------------------------
+# warm == cold greedy bit-identity (the correctness anchor)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("substrate", SUBSTRATES)
+def test_prefix_hits_bit_identical_to_cold(substrate):
+    """Shared 16-token system prompt over three requests: the first admission
+    is cold and indexes its blocks; both later ones link the cached chain and
+    prefill only their suffix - with tokens bit-identical to a cold-cache
+    engine on every substrate (IMC modes frozen)."""
+    cfg = _frozen_smoke(substrate)
+    max_new = 4 if substrate == "imc_bitserial" else 5
+    tails = [5, 9, 3] if substrate != "imc_bitserial" else [5, 3]
+    reqs = lambda: _shared_requests(cfg, 16, tails, max_new)  # noqa: E731
+
+    cold = Engine(cfg, jax_params(cfg), batch_slots=4, cache_len=48,
+                  max_chunk=4)
+    cold_out = {r.rid: r.out for r in serve(cold, reqs())}
+
+    warm = Engine(cfg, jax_params(cfg), batch_slots=4, cache_len=48,
+                  max_chunk=4, prefix_cache=True)
+    rq = reqs()
+    done = serve(warm, [rq[0]])  # seeds the index (a miss)
+    done += serve(warm, rq[1:])
+    warm_out = {r.rid: r.out for r in done}
+
+    assert warm.prefix_hits == len(tails) - 1
+    assert warm.prefix_hit_tokens == 16 * (len(tails) - 1)
+    assert warm.cow_copies == 0  # prompts extend past the cached chain
+    for rid, out in cold_out.items():
+        assert warm_out[rid] == out, (substrate, rid, warm_out[rid], out)
+    # retired sharers released their refs; only idle cached blocks remain
+    assert warm.alloc.used_count == warm.alloc.evictable_count > 0
+
+
+@pytest.mark.parametrize("substrate", SUBSTRATES)
+def test_cow_on_fully_cached_prompt_bit_identical(substrate):
+    """A duplicate prompt whose length is an exact block multiple: the whole
+    prompt is cached, so the mandatory final-token re-feed would write INTO
+    the last shared block - copy-on-write must give the new slot a private
+    copy, leave the shared block byte-identical for its peers, and keep
+    greedy tokens equal to the cold run."""
+    cfg = _frozen_smoke(substrate)
+    max_new = 4 if substrate == "imc_bitserial" else 5
+    dup = np.random.default_rng(5).integers(0, cfg.vocab_size, 16)
+    mk = lambda rid: Request(rid=rid, prompt=dup.copy(),  # noqa: E731
+                             max_new=max_new)
+
+    cold = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=32,
+                  max_chunk=4)
+    cold_out = [serve(cold, [mk(i)])[0].out for i in range(3)]
+
+    warm = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=32,
+                  max_chunk=4, prefix_cache=True)
+    warm_out = [serve(warm, [mk(i)])[0].out for i in range(3)]
+
+    assert warm.prefix_hits == 2 and warm.cow_copies == 2
+    # the third request still matched the ORIGINAL chain (CoW copies stay
+    # request-private; first writer wins keeps one canonical chain)
+    assert len(warm.prefix) == 2
+    assert warm_out == cold_out, (substrate, warm_out, cold_out)
+
+
+@pytest.mark.parametrize("substrate", SUBSTRATES)
+def test_preempt_resume_of_prefix_sharing_slot_bit_exact(substrate):
+    """A pool too small for both sharers' generation tails: lazy growth fails
+    mid-decode, a prefix-sharing victim is recompute-preempted (its refs
+    release; the shared block must NOT be pulled out from under its peer),
+    and the resume re-admission itself takes the warm path off the still-
+    cached prefix - tokens bit-identical to an ample-pool run."""
+    cfg = _frozen_smoke(substrate)
+    max_new = 5
+    tails = [5, 5, 6]
+
+    def _run(kv_blocks):
+        eng = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=32,
+                     max_chunk=4, kv_blocks=kv_blocks, prefix_cache=True)
+        done = serve(eng, [_shared_requests(cfg, 8, tails, max_new)[0]])
+        # two sharers resident at once: their growth contends for the pool
+        done += serve(eng, _shared_requests(cfg, 8, tails, max_new)[1:])
+        return eng, {r.rid: r.out for r in done}
+
+    ample_eng, ample = _run(kv_blocks=16)
+    assert ample_eng.preempt_count == 0
+    assert ample_eng.prefix_hits == 2
+    tight_eng, tight = _run(kv_blocks=5)
+    assert tight_eng.preempt_count >= 1
+    # resume re-admissions rode the cached prefix too
+    assert tight_eng.prefix_hits > ample_eng.prefix_hits
+    assert tight == ample, (substrate, tight, ample)
+    assert tight_eng.alloc.used_count == tight_eng.alloc.evictable_count
+
+
+def test_eviction_under_pool_pressure_keeps_serving():
+    """Distinct-prefix requests through a pool with room for roughly one
+    request: every admission must reclaim idle cached blocks (LRU leaf-first)
+    and outputs stay exact - the cache degrades, the engine never deadlocks."""
+    cfg = DENSE
+    rnp = np.random.default_rng(7)
+    prompts = [rnp.integers(0, cfg.vocab_size, 16) for _ in range(3)]
+
+    cold = Engine(cfg, jax_params(cfg), batch_slots=1, cache_len=32,
+                  max_chunk=4)
+    cold_out = [serve(cold, [Request(rid=i, prompt=p.copy(), max_new=4)])[0].out
+                for i, p in enumerate(prompts)]
+
+    eng = Engine(cfg, jax_params(cfg), batch_slots=1, cache_len=32,
+                 max_chunk=4, kv_blocks=4, prefix_cache=True)
+    outs = [serve(eng, [Request(rid=i, prompt=p.copy(), max_new=4)])[0].out
+            for i, p in enumerate(prompts)]
+
+    assert eng.prefix_evictions >= 1
+    assert outs == cold_out
+    assert eng.alloc.free_count + eng.alloc.used_count == 3
+    stats = eng.prefix_stats()
+    assert stats["evictions"] == eng.prefix_evictions
+    assert stats["cached_blocks"] == eng.alloc.evictable_count
+
+
+def test_prefix_cache_gated_off_for_non_paged_and_windowed():
+    """Eligibility gate: recurrent families (nothing paged) and windowed
+    patterns (per-slot rings are position-aliased, not shareable) silently
+    disable the cache instead of serving wrong tokens."""
+    for cfg in (configs.get_smoke("mamba2-2.7b"), WINDOWED):
+        eng = Engine(cfg, jax_params(cfg), batch_slots=2, cache_len=32,
+                     max_chunk=4, prefix_cache=True)
+        assert eng.prefix is None
+        assert eng.prefix_stats()["enabled"] is False
+        rnp = np.random.default_rng(8)
+        req = Request(rid=0, prompt=rnp.integers(0, cfg.vocab_size, 9),
+                      max_new=3)
+        out = serve(eng, [req])
+        assert out[0].error is None and len(out[0].out) == 3

@@ -160,6 +160,82 @@ def test_block_allocator_never_double_allocates(num_blocks, ops):
     assert alloc.free_count == capacity and alloc.used_count == 0
 
 
+@given(
+    num_blocks=st.integers(2, 32),
+    ops=st.lists(
+        st.tuples(st.integers(0, 4), st.integers(0, 12)),
+        min_size=1, max_size=80,
+    ),
+)
+@settings(max_examples=60, deadline=None)
+def test_block_allocator_refcount_sharing_invariants(num_blocks, ops):
+    """The prefix-sharing extension under arbitrary interleavings of admit /
+    share (retain) / release / register-cached / evict: the REFINED
+    conservation law ``free + referenced + idle_cached == capacity`` holds,
+    allocator refcounts agree with a model count, referenced blocks are
+    never evictable, and a fresh allocation never aliases a block that is
+    still referenced or cached (the invariant CoW relies on)."""
+    alloc = BlockAllocator(num_blocks)
+    capacity = num_blocks - 1
+    live = []      # per-sharer block lists (each entry holds one reference)
+    cached = set()  # blocks handed to the prefix index
+
+    def check():
+        refs = {}
+        for blocks in live:
+            for b in blocks:
+                refs[b] = refs.get(b, 0) + 1
+        held = set(refs) | cached
+        assert 0 not in held
+        for b, n in refs.items():
+            assert alloc.refcount(b) == n
+        # refined conservation: referenced + idle cached + free == capacity
+        assert alloc.free_count + len(held) == capacity
+        assert alloc.used_count == len(held)
+        assert alloc.evictable_count == len(cached - set(refs))
+        for b in cached:
+            assert alloc.is_evictable(b) == (b not in refs)
+
+    for op, n in ops:
+        if op == 0:  # admit: fresh allocation, one reference per block
+            got = alloc.alloc(max(1, n % 4))
+            if got is not None:
+                # CoW-safety: fresh blocks never alias referenced/cached ones
+                in_use = {b for blocks in live for b in blocks} | cached
+                assert not (set(got) & in_use)
+                live.append(got)
+        elif op == 1 and live:  # share: a prefix hit retains the same blocks
+            src = live[n % len(live)]
+            alloc.retain(src)
+            live.append(list(src))
+        elif op == 2 and live:  # release one sharer (retire / preempt)
+            alloc.free(live.pop(n % len(live)))
+        elif op == 3 and live:  # index a block with the prefix cache
+            blocks = live[n % len(live)]
+            b = blocks[n % len(blocks)]
+            cached.add(b)
+            alloc.register_cached(b)
+        elif op == 4:  # evict one idle cached block (LRU order irrelevant)
+            refs = {b for blocks in live for b in blocks}
+            idle = sorted(cached - refs)
+            if idle:
+                b = idle[n % len(idle)]
+                alloc.evict(b)
+                cached.remove(b)
+            elif cached:  # every cached block is referenced: evict must raise
+                b = sorted(cached)[n % len(cached)]
+                with pytest.raises(ValueError):
+                    alloc.evict(b)
+        check()
+
+    for blocks in live:  # drain: release every sharer, evict every idle block
+        alloc.free(blocks)
+    for b in sorted(cached):
+        alloc.evict(b)
+    assert alloc.free_count == capacity and alloc.used_count == 0
+    assert alloc.evictable_count == 0
+
+
 @given(num_blocks=st.integers(2, 32), n=st.integers(0, 40))
 @settings(max_examples=40, deadline=None)
 def test_block_allocator_all_or_nothing(num_blocks, n):
